@@ -1,0 +1,64 @@
+"""Continuous-batching throughput: requests served and aggregate tok/s
+vs decode-slot count. The paper's stated limitation — "shared
+deployments with concurrent users may see higher TTFT due to worker
+queuing" (§Limitations) — is exactly what a continuous batcher fixes;
+this benchmark quantifies it on our engine."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_smoke_config
+from repro.serving import ContinuousBatcher, Request, ServingEngine
+
+
+def run(n_requests: int = 12, tokens: int = 24, slot_counts=(1, 2, 4), quiet=False):
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=384)
+    engine = ServingEngine(cfg, max_seq=128)
+    engine.warmup()
+    rows = {}
+    for slots in slot_counts:
+        cb = ContinuousBatcher(engine, slots=slots, max_seq=128)
+        done = []
+        ttfts = {}
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            rid = f"r{i}"
+            def mk(rid=rid, t_sub=None):
+                sub = time.perf_counter()
+                def on_token(tid, s, rid=rid, sub=sub):
+                    if rid not in ttfts:
+                        ttfts[rid] = time.perf_counter() - sub
+                return on_token
+            cb.submit(Request(rid=rid, prompt_ids=engine.tokenizer.encode(f"query {i}"),
+                              max_new_tokens=tokens, on_token=mk(),
+                              on_done=lambda r: done.append(r.rid)))
+        steps = cb.run_until_drained()
+        wall = time.perf_counter() - t0
+        total_tokens = n_requests * tokens
+        rows[slots] = {
+            "wall_s": wall,
+            "agg_tok_s": total_tokens / wall,
+            "req_s": n_requests / wall,
+            "ttft_p50": sorted(ttfts.values())[len(ttfts) // 2],
+            "steps": steps,
+        }
+        assert len(done) == n_requests
+    if not quiet:
+        print(f"\n=== continuous batching ({n_requests} requests x {tokens} tokens) ===")
+        print(f"{'slots':>6s} {'wall(s)':>8s} {'tok/s':>8s} {'req/s':>7s} {'ttft_p50':>9s}")
+        for slots, r in rows.items():
+            print(f"{slots:6d} {r['wall_s']:8.2f} {r['agg_tok_s']:8.1f} "
+                  f"{r['req_s']:7.2f} {r['ttft_p50']:9.3f}")
+        base = rows[slot_counts[0]]["agg_tok_s"]
+        best = max(r["agg_tok_s"] for r in rows.values())
+        print(f"throughput scaling: {best/base:.2f}x from slot count "
+              f"{slot_counts[0]} -> best")
+        print("[note: ~1x is expected on 1 CPU core — a batch-B decode step "
+              "costs ~B single steps here; on TPU the decode step is "
+              "HBM-bound, so slots scale near-linearly until compute-bound]")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

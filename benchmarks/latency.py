@@ -1,0 +1,76 @@
+"""Paper Table 2: TTFT + throughput per tier, medians over N runs with
+the complexity judge bypassed (tier bypass mode). The HPC tier is
+measured BOTH ways: dual-channel relay streaming and batch fallback —
+the 21.1x headline. All generation is real (JAX engine); the cloud row
+is a simulated API (documented)."""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import build_system
+
+
+def _median_ci(vals):
+    vals = sorted(vals)
+    return (statistics.median(vals),
+            vals[max(int(0.95 * len(vals)) - 1, 0)],
+            statistics.pstdev(vals))
+
+
+def run(runs: int = 25, max_tokens: int = 128, hpc_tokens: int = 512, quiet=False):
+    """hpc_tokens is larger: the paper's HPC responses ran ~11 s of
+    generation, and the relay-vs-batch ratio is response-length bound
+    (batch TTFT == total generation time)."""
+    sys_ = build_system(dispatch_latency_s=0.05, cloud_ttft_s=0.03, max_seq=1024)
+    msgs = [{"role": "user", "content": "Summarize the benefits of tiered inference."}]
+
+    # warm every path (compile once; we measure steady state)
+    sys_.backends["local"].stream(msgs, max_tokens=max_tokens)
+    sys_.backends["hpc"].stream(msgs, max_tokens=hpc_tokens)
+    sys_.backends["hpc"].relay_enabled = False
+    sys_.backends["hpc"].stream(msgs, max_tokens=hpc_tokens)
+    sys_.backends["hpc"].relay_enabled = True
+    sys_.backends["cloud"].stream(msgs, max_tokens=8)
+
+    rows = {}
+
+    def bench(name, fn):
+        ttfts, tps = [], []
+        for _ in range(runs):
+            r = fn()
+            ttfts.append(r.ttft_s)
+            tps.append(r.tok_per_s)
+        med, p95, sd = _median_ci(ttfts)
+        rows[name] = {"ttft_s": med, "ttft_p95": p95, "ttft_sd": sd,
+                      "tok_per_s": statistics.median(tps)}
+
+    bench("local", lambda: sys_.backends["local"].stream(msgs, max_tokens=max_tokens))
+    bench("hpc_relay", lambda: sys_.backends["hpc"].stream(msgs, max_tokens=hpc_tokens))
+    sys_.backends["hpc"].relay_enabled = False
+    bench("hpc_batch", lambda: sys_.backends["hpc"].stream(msgs, max_tokens=hpc_tokens))
+    sys_.backends["hpc"].relay_enabled = True
+    bench("cloud(sim)", lambda: sys_.backends["cloud"].stream(msgs, max_tokens=32))
+
+    ratio = rows["hpc_batch"]["ttft_s"] / rows["hpc_relay"]["ttft_s"]
+    if not quiet:
+        print(f"\n=== Table 2 — response latency (medians over {runs} runs, "
+              f"{max_tokens} tokens, judge bypassed) ===")
+        print(f"{'tier':12s} {'TTFT(s)':>9s} {'±sd':>7s} {'p95':>7s} {'tok/s':>8s}")
+        for name, r in rows.items():
+            print(f"{name:12s} {r['ttft_s']:9.3f} {r['ttft_sd']:7.3f} "
+                  f"{r['ttft_p95']:7.3f} {r['tok_per_s']:8.1f}")
+        print(f"\nrelay-vs-batch TTFT improvement: {ratio:.1f}x "
+              f"(paper: 11.40s -> 0.54s = 21.1x; same structure — batch TTFT == "
+              f"total generation time, relay TTFT == dispatch + first token)")
+        same_tput = abs(rows['hpc_relay']['tok_per_s'] - rows['hpc_batch']['tok_per_s']) \
+            / max(rows['hpc_batch']['tok_per_s'], 1e-9)
+        print(f"relay per-token overhead: {same_tput*100:.1f}% tok/s delta "
+              f"(paper: both modes 26.9 tok/s)")
+    rows["ratio_batch_over_relay"] = ratio
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Paper Table 1: routing confusion matrix on a 1,200-query benchmark
+(400/class, 10 domains). Evaluates the keyword fallback judge AND the
+trained feature classifier (the paper's own proposed next step),
+reporting accuracy, per-class recall/precision, paid-tier leakage,
+free-tier retention, and judge latency."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.queries import generate
+from repro.core.judge import CachedJudge, Complexity, FeatureJudge, KeywordJudge
+
+
+def confusion(judge, texts, labels):
+    cm = np.zeros((3, 3), int)
+    lat = []
+    for t, y in zip(texts, labels):
+        c, l = judge.judge(t)
+        cm[y, int(c)] += 1
+        lat.append(l)
+    return cm, np.asarray(lat)
+
+
+def metrics(cm):
+    total = cm.sum()
+    acc = np.trace(cm) / total
+    recall = [cm[i, i] / max(cm[i].sum(), 1) for i in range(3)]
+    precision = [cm[i, i] / max(cm[:, i].sum(), 1) for i in range(3)]
+    # paid-tier leakage: true LOW/MED predicted HIGH -> routed to paid cloud
+    leaked = int(cm[0, 2] + cm[1, 2])
+    free_total = int(cm[0].sum() + cm[1].sum())
+    retention = (free_total - leaked) / free_total
+    f1 = np.mean([2 * r * p / max(r + p, 1e-9) for r, p in zip(recall, precision)])
+    return dict(accuracy=acc, recall=recall, precision=precision,
+                leaked=leaked, retention=retention, f1=f1)
+
+
+def run(n_per_class: int = 400, quiet=False):
+    # template-level holdout: disjoint template halves + disjoint seeds
+    texts, labels = generate(n_per_class, seed=1, split="test")
+    train_texts, train_labels = generate(n_per_class, seed=7, split="train")
+
+    rows = []
+    judges = {
+        "keyword(fallback)": CachedJudge(KeywordJudge()),
+    }
+    t0 = time.perf_counter()
+    fj, train_loss = FeatureJudge.train(train_texts, train_labels, steps=400)
+    train_s = time.perf_counter() - t0
+    judges["feature(trained)"] = fj
+
+    out = {}
+    for name, judge in judges.items():
+        cm, lat = confusion(judge, texts, labels)
+        m = metrics(cm)
+        out[name] = {"cm": cm.tolist(), **{k: (v if not isinstance(v, list) else v)
+                                           for k, v in m.items()},
+                     "judge_ms_p50": float(np.median(lat) * 1e3),
+                     "judge_ms_p95": float(np.percentile(lat, 95) * 1e3)}
+        if not quiet:
+            print(f"\n=== Table 1 — {name} (n={len(texts)}) ===")
+            print("True\\Pred      LOW    MED   HIGH   Recall")
+            for i, nm in enumerate(("LOW", "MEDIUM", "HIGH")):
+                print(f"{nm:10s} {cm[i,0]:6d} {cm[i,1]:6d} {cm[i,2]:6d}   {m['recall'][i]*100:5.1f}%")
+            print(f"Precision  {m['precision'][0]*100:5.1f}% {m['precision'][1]*100:5.1f}% "
+                  f"{m['precision'][2]*100:5.1f}%   F1: {m['f1']:.2f}")
+            print(f"overall={m['accuracy']*100:.1f}%  leaked={m['leaked']}  "
+                  f"free-tier retention={m['retention']*100:.1f}%  "
+                  f"judge p50={out[name]['judge_ms_p50']:.2f}ms p95={out[name]['judge_ms_p95']:.2f}ms")
+    if not quiet:
+        print(f"\n[paper: Llama3.2-3B judge 49.0% acc, 119 leaked, 85.1% retention, "
+              f"164ms p50 judge latency]")
+        print(f"[feature judge trained in-framework: loss={train_loss:.3f} in {train_s:.1f}s]")
+    return out
+
+
+if __name__ == "__main__":
+    run()

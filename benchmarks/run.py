@@ -1,0 +1,60 @@
+"""Benchmark harness — one function per paper table + the roofline
+report. Prints a final ``name,value,derived`` CSV summary."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    small = "--quick" in sys.argv
+    csv_rows = []
+
+    t0 = time.perf_counter()
+    from benchmarks import routing_accuracy
+    r1 = routing_accuracy.run(n_per_class=100 if small else 400)
+    for name, m in r1.items():
+        csv_rows.append((f"table1.{name}.accuracy", f"{m['accuracy']*100:.1f}%",
+                         f"retention={m['retention']*100:.1f}% leaked={m['leaked']}"))
+        csv_rows.append((f"table1.{name}.judge_ms_p50", f"{m['judge_ms_p50']:.3f}",
+                         f"p95={m['judge_ms_p95']:.3f}ms"))
+
+    from benchmarks import latency
+    r2 = latency.run(runs=10 if small else 25)
+    for tier in ("local", "hpc_relay", "hpc_batch", "cloud(sim)"):
+        csv_rows.append((f"table2.{tier}.ttft_s", f"{r2[tier]['ttft_s']:.3f}",
+                         f"tok/s={r2[tier]['tok_per_s']:.1f}"))
+    csv_rows.append(("table2.relay_speedup", f"{r2['ratio_batch_over_relay']:.1f}x",
+                     "paper: 21.1x"))
+
+    from benchmarks import summarization
+    r3 = summarization.run()
+    csv_rows.append(("table3.first_upgrade.no_summ",
+                     str(r3["first_upgrade"]["no_summ"]), "paper: turn 30"))
+    csv_rows.append(("table3.first_upgrade.with_summ",
+                     str(r3["first_upgrade"]["with_summ"] or "Never"), "paper: Never"))
+
+    from benchmarks import batch_throughput
+    r_bt = batch_throughput.run(n_requests=8 if small else 12)
+    best_slots = max(r_bt, key=lambda s: r_bt[s]["agg_tok_s"])
+    csv_rows.append(("batching.best_tok_s", f"{r_bt[best_slots]['agg_tok_s']:.0f}",
+                     f"slots={best_slots}"))
+
+    from benchmarks import roofline
+    r4 = roofline.run()
+    if r4:
+        worst = min(r4.values(), key=lambda r: r["mfu_bound"] if r["shape"] == "train_4k" else 1)
+        best = max(r4.values(), key=lambda r: r["mfu_bound"])
+        csv_rows.append(("roofline.cells", str(len(r4)), "single-pod 16x16"))
+        csv_rows.append(("roofline.best_mfu_bound",
+                         f"{best['mfu_bound']:.3f}", f"{best['arch']}/{best['shape']}"))
+
+    print("\n=== summary CSV (name,value,derived) ===")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+    print(f"\ntotal benchmark time: {time.perf_counter()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

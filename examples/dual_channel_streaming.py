@@ -1,0 +1,55 @@
+"""The paper's headline experiment, end to end: dual-channel relay
+streaming vs batch fallback TTFT on the HPC tier.
+
+    PYTHONPATH=src python examples/dual_channel_streaming.py
+
+Shows: (1) control-plane dispatch with credentials pre-provisioned (not
+task args), (2) the consumer connecting before the producer, (3)
+AES-256-GCM ciphertext on the wire, (4) batch fallback when the relay
+is disabled, (5) TTFT comparison.
+"""
+
+import time
+
+from repro.core import build_system
+
+
+def main():
+    system = build_system(dispatch_latency_s=0.08, max_seq=512, encrypt=True)
+    hpc = system.backends["hpc"]
+    msgs = [{"role": "user", "content": "Stream me a long answer, token by token."}]
+
+    # warm both paths (XLA compile)
+    hpc.stream(msgs, max_tokens=256)
+    hpc.relay_enabled = False
+    hpc.stream(msgs, max_tokens=256)
+    hpc.relay_enabled = True
+
+    print("== dual-channel relay streaming ==")
+    stamps = []
+    t0 = time.perf_counter()
+    r = hpc.stream(msgs, max_tokens=256,
+                   on_token=lambda tid, s: stamps.append(time.perf_counter() - t0))
+    print(f"TTFT {r.ttft_s*1000:6.1f} ms   total {r.total_s*1000:7.1f} ms   "
+          f"{r.n_completion_tokens} tokens @ {r.tok_per_s:.0f} tok/s")
+    print(f"first 5 token arrivals: {[f'{s*1000:.0f}ms' for s in stamps[:5]]}")
+
+    print("\n== batch fallback (relay disabled) ==")
+    hpc.relay_enabled = False
+    r2 = hpc.stream(msgs, max_tokens=256)
+    hpc.relay_enabled = True
+    print(f"TTFT {r2.ttft_s*1000:6.1f} ms   total {r2.total_s*1000:7.1f} ms   "
+          f"(TTFT == total: the whole payload returns through the control plane)")
+
+    print(f"\nTTFT improvement: {r2.ttft_s / r.ttft_s:.1f}x  (paper: 21.1x)")
+
+    print("\n== what the relay saw (opaque ciphertext, no secrets) ==")
+    print("relay stats:", system.relay.stats)
+    print("access-log sample:", system.relay.access_log[:2])
+    print("control-plane task args:",
+          {k: (v if k != 'messages' else '...') for k, v in
+           system.endpoint.task_records()[-1].kwargs.items()})
+
+
+if __name__ == "__main__":
+    main()

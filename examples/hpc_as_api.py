@@ -1,0 +1,54 @@
+"""HPC-as-API proxy mode (paper §4): call institutional HPC like any
+OpenAI-compatible endpoint — bearer token + messages in, SSE out.
+
+    PYTHONPATH=src python examples/hpc_as_api.py
+"""
+
+import json
+
+from repro.core import build_system
+from repro.core.sse import parse_sse
+
+
+def main():
+    system = build_system(dispatch_latency_s=0.05, max_seq=256)
+
+    # institutional user: Globus token, verified + domain-checked
+    token = system.globus.issue_token("researcher@uic.edu")
+    print("== Globus-token mode (streaming) ==")
+    resp = system.proxy.handle_chat_completions(
+        {"model": "qwen2.5-vl-72b-awq",
+         "messages": [{"role": "user", "content": "Hello from a standard client"}],
+         "max_tokens": 16, "stream": True},
+        bearer=token, client_ip="10.1.2.3")
+    frames = "".join(resp.stream)
+    chunks = parse_sse(frames)
+    text = "".join(c["choices"][0]["delta"].get("content", "")
+                   for c in chunks if "choices" in c)
+    print(f"status={resp.status} chunks={len(chunks)} text={text[:60]!r}")
+
+    # external service: pre-issued API key, non-streaming
+    key = system.api_keys.issue("cloud-app-team")
+    print("\n== API-key mode (non-streaming) ==")
+    resp2 = system.proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "one-shot completion"}],
+         "max_tokens": 8, "stream": False}, bearer=key)
+    print(f"status={resp2.status}")
+    print(json.dumps(resp2.body, indent=2)[:400])
+
+    # what gets rejected before any cluster work
+    print("\n== rejections (no HPC job is ever submitted) ==")
+    for req, bearer, why in [
+        ({"messages": [{"role": "user", "content": "x"}]}, "bad-token", "bad auth"),
+        ({"messages": [{"role": "pirate", "content": "x"}]}, token, "bad role"),
+        ({"messages": []}, token, "empty messages"),
+    ]:
+        r = system.proxy.handle_chat_completions(req, bearer=bearer)
+        print(f"  {why:15s} -> HTTP {r.status} {r.body['error']['type']}")
+
+    print("\naudit log (identity + credential hash + IP, never content):")
+    print(json.dumps(system.proxy.audit_log[-2:], indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

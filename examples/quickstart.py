@@ -1,0 +1,45 @@
+"""Quickstart: route three queries through STREAM's three tiers.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the full system (local + HPC-behind-dual-channel + simulated
+cloud, smoke-scale JAX models), routes a LOW / MEDIUM / HIGH query, and
+streams tokens as they are generated.
+"""
+
+import sys
+
+from repro.core import build_system
+
+
+def main():
+    print("building STREAM (three tiers, relay, proxy)...")
+    system = build_system(dispatch_latency_s=0.05, max_seq=160)
+
+    queries = [
+        "What is the capital of France?",                               # LOW
+        "Explain how attention mechanisms relate to hash tables and "
+        "compare their trade-offs.",                                    # MEDIUM
+        "Prove, from first principles, the convergence of gradient "
+        "descent, and propose a novel research extension in depth.",    # HIGH
+    ]
+    for q in queries:
+        print(f"\n>>> {q}")
+        sys.stdout.write("    ")
+
+        def on_token(tid, text):
+            sys.stdout.write(text or "·")
+            sys.stdout.flush()
+
+        h = system.handler.handle(q, max_tokens=24, on_token=on_token)
+        r = h.result
+        print(f"\n    [{h.complexity.name} -> {h.tier_used}] "
+              f"ttft={r.ttft_s*1000:.0f}ms tok/s={r.tok_per_s:.0f} "
+              f"cost=${r.cost_usd:.5f} judge={h.judge_latency_s*1000:.2f}ms")
+
+    print("\nusage by tier:", {k: v["n"] for k, v in
+                               system.tracker.summary()["by_tier"].items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end training driver: train a ~100M-parameter xLSTM for a few
+hundred steps on CPU with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+
+Uses a width-reduced xlstm-125m (~100M params would take hours on one
+CPU core; --tiny, the default, drops width so the loop runs in minutes
+while exercising the identical code path — pass --full-width for the
+real 125M config)."""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import AdamWConfig, CheckpointManager, SyntheticLMData, make_train_step
+from repro.training.train import init_train_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full-width", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config("xlstm-125m")
+    if not args.full_width:
+        cfg = cfg.replace(d_model=128, n_heads=2, n_layers=6, vocab_size=2048,
+                          vocab_pad_to=256)
+    model = build_model(cfg)
+    params, opt = init_train_state(model, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"training {cfg.name}: {n:,} params, {args.steps} steps")
+
+    oc = AdamWConfig(lr=3e-3, warmup_steps=10, decay_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, oc))
+    data = SyntheticLMData(cfg.vocab_size, batch=8, seq_len=64)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        cm = CheckpointManager(ckpt_dir, keep_last=2)
+        losses = []
+        for step in range(args.steps):
+            batch = data.next()
+            params, opt, m = step_fn(params, opt,
+                                     {"tokens": jnp.asarray(batch["tokens"])})
+            losses.append(float(m["loss"]))
+            if step % 25 == 0:
+                print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                      f"lr {float(m['lr']):.2e}")
+            if (step + 1) % 100 == 0:
+                cm.save_async(step + 1, {"params": params, "opt": opt},
+                              aux={"data": data.state()})
+        cm.wait()
+        print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"(structured bigram data: should drop well below ln(V))")
+        # simulate preemption + restart
+        tree, aux, step = cm.restore(None, {"params": params, "opt": opt})
+        print(f"restart check: restored step {step}, data stream at "
+              f"batch {aux['data']['step']} — bit-exact resume verified in tests")
+
+
+if __name__ == "__main__":
+    main()

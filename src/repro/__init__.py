@@ -1,0 +1,16 @@
+"""STREAM-JAX: multi-tier LLM inference middleware with dual-channel token
+streaming (PEARC '26), rebuilt as a production multi-pod JAX framework.
+
+Layers:
+  repro.core         -- the paper's contribution: judge, router, relay, planes,
+                        summarizer, HPC-as-API proxy, crypto, SSE, metrics.
+  repro.models       -- 10 assigned architectures, pure functional JAX.
+  repro.serving      -- prefill/decode engine, KV cache, scheduler.
+  repro.training     -- optimizer, train step, data pipeline, checkpointing.
+  repro.distributed  -- sharding rules, mesh helpers, fault tolerance.
+  repro.kernels      -- Pallas TPU kernels + jnp oracles.
+  repro.configs      -- architecture configs (full + smoke).
+  repro.launch       -- mesh / dryrun / train / serve entry points.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+from repro.configs.registry import (ARCHS, SHAPES, SUBQUADRATIC, ShapeCell,
+                                    get_config, get_smoke_config, list_archs,
+                                    shapes_for)
+
+__all__ = ["ARCHS", "SHAPES", "SUBQUADRATIC", "ShapeCell", "get_config",
+           "get_smoke_config", "list_archs", "shapes_for"]

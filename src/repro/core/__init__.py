@@ -1,0 +1,32 @@
+"""STREAM's contribution: three-tier routing, dual-channel streaming,
+tier-aware summarization, HPC-as-API proxy."""
+
+from repro.core.crypto import AESGCM, InvalidTag, new_key
+from repro.core.relay import Relay, AuthError, RelayError, new_channel_id
+from repro.core.control_plane import ComputeEndpoint, TaskFailed, submit_with_retries
+from repro.core.data_plane import consume_tokens, produce_tokens
+from repro.core.judge import Complexity, KeywordJudge, FeatureJudge, CachedJudge
+from repro.core.summarizer import TierAwareSummarizer, SummarizerPolicy, DEFAULT_POLICIES
+from repro.core.router import TierRouter, FALLBACK_CHAINS
+from repro.core.handler import StreamingHandler
+from repro.core.tiers import TierSpec, TierResult, LocalBackend, HPCBackend, CloudBackend, BackendError
+from repro.core.auth import (GlobusAuthService, ApiKeyStore, DualAuthenticator,
+                             SlidingWindowRateLimiter, AuthFailure)
+from repro.core.proxy import HPCAsAPIProxy, ValidationError
+from repro.core.metrics import UsageTracker
+from repro.core.system import StreamSystem, build_system
+
+__all__ = [
+    "AESGCM", "InvalidTag", "new_key",
+    "Relay", "AuthError", "RelayError", "new_channel_id",
+    "ComputeEndpoint", "TaskFailed", "submit_with_retries",
+    "consume_tokens", "produce_tokens",
+    "Complexity", "KeywordJudge", "FeatureJudge", "CachedJudge",
+    "TierAwareSummarizer", "SummarizerPolicy", "DEFAULT_POLICIES",
+    "TierRouter", "FALLBACK_CHAINS", "StreamingHandler",
+    "TierSpec", "TierResult", "LocalBackend", "HPCBackend", "CloudBackend", "BackendError",
+    "GlobusAuthService", "ApiKeyStore", "DualAuthenticator",
+    "SlidingWindowRateLimiter", "AuthFailure",
+    "HPCAsAPIProxy", "ValidationError", "UsageTracker",
+    "StreamSystem", "build_system",
+]

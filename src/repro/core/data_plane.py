@@ -1,0 +1,136 @@
+"""Data-plane helpers: the producer/consumer halves of the dual channel.
+
+The producer side runs *inside the remote function* on the control
+plane's worker (the paper copies the AES helper into the remote function
+body because the package isn't installed on the endpoint; our equivalent
+is REMOTE_FN_SOURCE below — a self-contained source string that only
+assumes WORKER_ENV and a relay handle exist in its namespace).
+
+The consumer side runs in the HPC proxy (server mode) or in-process
+(desktop mode) and re-assembles the ordered, decrypted token stream.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+import time
+
+from repro.core.crypto import AESGCM, decrypt_envelope, encrypt_envelope
+from repro.core.relay import Relay
+
+
+def produce_tokens(relay: Relay, channel_id: str, secret: str, token_iter,
+                   enc_key: bytes | None = None):
+    """Producer loop: forward each token to the relay as it is generated.
+
+    token_iter yields (token_id, text) tuples. Returns token count.
+    """
+    aes = AESGCM(enc_key) if enc_key else None
+    prod = relay.connect_producer(channel_id).authenticate(secret)
+    seq = 0
+    try:
+        for token_id, text in token_iter:
+            payload = {"t": "token", "seq": seq, "id": int(token_id), "text": text}
+            prod.send(encrypt_envelope(aes, payload) if aes else payload)
+            seq += 1
+        prod.send(encrypt_envelope(aes, {"t": "done", "seq": seq})
+                  if aes else {"t": "done", "seq": seq})
+    except BaseException as e:
+        try:
+            payload = {"t": "error", "seq": seq, "error": f"{type(e).__name__}: {e}"}
+            prod.send(encrypt_envelope(aes, payload) if aes else payload)
+        except Exception:
+            pass
+        raise
+    finally:
+        prod.close()
+    return seq
+
+
+def consume_tokens(relay: Relay, channel_id: str, secret: str,
+                   enc_key: bytes | None = None, timeout_s: float = 60.0):
+    """Consumer generator: yields decrypted token payload dicts in order.
+
+    Raises RuntimeError on an in-band error message; verifies sequence
+    numbers (a tampered/reordered stream fails loudly)."""
+    aes = AESGCM(enc_key) if enc_key else None
+    cons = relay.connect_consumer(channel_id).authenticate(secret)
+    expect = 0
+    try:
+        while True:
+            msg = cons.recv(timeout=timeout_s)
+            if msg is None:
+                return
+            payload = decrypt_envelope(aes, msg) if aes else msg
+            if payload.get("t") == "error":
+                raise RuntimeError(f"producer error: {payload.get('error')}")
+            if payload.get("t") == "done":
+                return
+            if payload.get("seq") != expect:
+                raise RuntimeError(
+                    f"out-of-order token: got seq={payload.get('seq')}, want {expect}")
+            expect += 1
+            yield payload
+    finally:
+        cons.close()
+
+
+# ---------------------------------------------------------------------------
+# The remote function, as shipped source (paper §3.2 items (1) and (2)).
+# Self-contained: reads credentials from WORKER_ENV, uses only names the
+# endpoint injects (relay handle + engine handle via extra_globals).
+# ---------------------------------------------------------------------------
+
+REMOTE_FN_NAME = "hpc_stream_task"
+
+REMOTE_FN_SOURCE = '''
+import base64, json, os
+
+def hpc_stream_task(*, messages, model, channel_id, max_tokens=64,
+                    relay_url=None, vllm_url=None):
+    """Runs ON the HPC worker. Generates with the local engine (the
+    paper's vLLM-over-localhost call) and forwards each token outbound
+    to the relay. Credentials come from the pre-provisioned worker env,
+    NEVER from task args. Returns the full text (the batch-mode payload
+    used when the relay is unreachable)."""
+    secret = WORKER_ENV["RELAY_SECRET"]
+    enc_key_b64 = WORKER_ENV.get("RELAY_ENCRYPTION_KEY")
+    enc_key = base64.b64decode(enc_key_b64) if enc_key_b64 else None
+
+    engine = ENGINE          # injected: the tier's serving engine
+    relay = RELAY            # injected: reachable relay handle (or None)
+    produce = PRODUCE_TOKENS # injected: repro.core.data_plane.produce_tokens
+
+    prompt = "\\n".join(m.get("content", "") for m in messages)
+
+    if relay is None:
+        # batch fallback: no streaming; the complete response returns
+        # through the control plane (TTFT == total time).
+        res = engine.generate(prompt, max_new_tokens=max_tokens)
+        return {"text": res.text, "n_tokens": res.n_generated, "streamed": False}
+
+    # stream as generated: engine callback pushes straight to the relay
+    import threading, queue as _q
+    q = _q.Queue()
+    res_box = {}
+    def run():
+        try:
+            r = engine.generate(prompt, max_new_tokens=max_tokens,
+                                on_token=lambda tid, text: q.put((tid, text)))
+            res_box["res"] = r
+        finally:
+            q.put(None)
+    th = threading.Thread(target=run, daemon=True)
+    th.start()
+    def live_iter():
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            yield item
+    n = produce(relay, channel_id, secret, live_iter(), enc_key)
+    th.join()
+    r = res_box.get("res")
+    return {"text": r.text if r else "", "n_tokens": n, "streamed": True}
+'''

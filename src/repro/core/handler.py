@@ -1,0 +1,87 @@
+"""StreamingHandler — the per-query pipeline (paper §2, Figure 1):
+
+    judge -> route -> (summarize for target tier) -> dispatch -> stream
+    -> usage log (no content) ; automatic fallback to the next tier in
+    the chain on backend failure.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.judge import Complexity
+from repro.core.metrics import UsageTracker
+from repro.core.router import TierRouter
+from repro.core.summarizer import TierAwareSummarizer, conversation_tokens
+from repro.core.tiers import BackendError, TierResult
+
+
+@dataclass
+class HandledQuery:
+    result: TierResult
+    complexity: Complexity
+    tier_used: str
+    chain: tuple
+    fallback_depth: int
+    summarized: bool
+    judge_latency_s: float
+
+
+class StreamingHandler:
+    def __init__(self, router: TierRouter, summarizer: TierAwareSummarizer,
+                 tracker: UsageTracker | None = None):
+        self.router = router
+        self.summarizer = summarizer
+        self.tracker = tracker or UsageTracker()
+
+    def handle(self, query: str, history: list | None = None, *,
+               override_tier: str | None = None, max_tokens: int = 64,
+               on_token: Optional[Callable[[int, str], None]] = None) -> HandledQuery:
+        history = list(history or [])
+        decision = self.router.route(query, override_tier=override_tier)
+        if not decision.chain:
+            raise BackendError("no healthy tier available")
+
+        last_err: Exception | None = None
+        for depth, tier in enumerate(decision.chain):
+            backend = self.router.backends[tier]
+            messages = history + [{"role": "user", "content": query}]
+            # tier-aware summarization against the *target* tier's window
+            messages, summarized = self.summarizer.apply(messages, tier)
+            if not self.summarizer.fits(messages, tier):
+                last_err = BackendError(f"context exceeds {tier} window even "
+                                        f"after summarization")
+                continue
+            try:
+                result = backend.stream(messages, max_tokens=max_tokens,
+                                        on_token=on_token)
+            except BackendError as e:
+                last_err = e
+                continue
+            self.tracker.record(
+                tier=tier, model=result.model, complexity=decision.complexity.name,
+                prompt_tokens=result.n_prompt_tokens,
+                completion_tokens=result.n_completion_tokens,
+                cost_usd=result.cost_usd, ttft_s=result.ttft_s,
+                total_s=result.total_s, streamed=result.streamed,
+                fallback_depth=depth, judge_latency_s=decision.judge_latency_s)
+            return HandledQuery(result=result, complexity=decision.complexity,
+                                tier_used=tier, chain=decision.chain,
+                                fallback_depth=depth, summarized=summarized,
+                                judge_latency_s=decision.judge_latency_s)
+        raise BackendError(f"all tiers failed; last error: {last_err}")
+
+    def route_only(self, query: str, history: list | None = None) -> str:
+        """Which tier WOULD serve this query (Table-3 probe experiment):
+        first tier in the chain whose window fits the (possibly
+        summarized) conversation."""
+        history = list(history or [])
+        decision = self.router.route(query)
+        for tier in decision.chain:
+            messages = history + [{"role": "user", "content": query}]
+            messages, _ = self.summarizer.apply(messages, tier)
+            if self.summarizer.fits(messages, tier):
+                return tier
+        return decision.chain[-1] if decision.chain else "none"

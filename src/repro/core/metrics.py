@@ -1,0 +1,65 @@
+"""Usage/cost tracking (paper §2): per-request metadata — model name,
+prompt tokens, completion tokens, cost, latency — WITHOUT message
+content. Tests assert no content string ever lands in a record."""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class UsageRecord:
+    ts: float
+    tier: str
+    model: str
+    complexity: str
+    prompt_tokens: int
+    completion_tokens: int
+    cost_usd: float
+    ttft_s: float
+    total_s: float
+    streamed: bool
+    fallback_depth: int
+    judge_latency_s: float
+
+
+def _pct(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    i = min(int(q * (len(sorted_vals) - 1)), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+class UsageTracker:
+    def __init__(self):
+        self._records: list[UsageRecord] = []
+        self._lock = threading.Lock()
+
+    def record(self, **kw) -> UsageRecord:
+        rec = UsageRecord(ts=time.time(), **kw)
+        with self._lock:
+            self._records.append(rec)
+        return rec
+
+    def records(self):
+        with self._lock:
+            return list(self._records)
+
+    def summary(self) -> dict:
+        recs = self.records()
+        out = {"n_requests": len(recs),
+               "total_cost_usd": sum(r.cost_usd for r in recs),
+               "by_tier": {}}
+        for tier in sorted({r.tier for r in recs}):
+            rs = [r for r in recs if r.tier == tier]
+            tt = sorted(r.ttft_s for r in rs)
+            out["by_tier"][tier] = {
+                "n": len(rs),
+                "ttft_p50": _pct(tt, 0.5),
+                "ttft_p95": _pct(tt, 0.95),
+                "cost_usd": sum(r.cost_usd for r in rs),
+                "tokens_out": sum(r.completion_tokens for r in rs),
+            }
+        return out

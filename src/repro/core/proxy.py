@@ -1,0 +1,167 @@
+"""HPC-as-API proxy (paper §4): an OpenAI-compatible endpoint over the
+dual-channel flow. Callers need only a bearer token and a base URL.
+
+Request path:
+  1. authenticate (Globus token first, API key fallback);
+  2. sliding-window rate limit per caller;
+  3. message-format validation (roles, content length, count) BEFORE any
+     control-plane work — unauthenticated/invalid requests never reach
+     the cluster;
+  4. run the dual-channel flow via the HPC backend;
+  5. return an OpenAI-compatible SSE stream (or a JSON completion).
+
+Every request is audit-logged with caller identity, credential hash and
+client IP — never message content.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Iterator
+
+from repro.core.auth import (AuthFailure, DualAuthenticator, SlidingWindowRateLimiter,
+                             credential_hash)
+from repro.core.sse import SSE_DONE, chat_chunk, chat_completion, new_request_id, sse_event
+from repro.core.tiers import BackendError, HPCBackend
+
+VALID_ROLES = {"system", "user", "assistant"}
+MAX_MESSAGES = 128
+MAX_CONTENT_CHARS = 65536
+
+
+@dataclass
+class ProxyResponse:
+    status: int
+    body: dict | None = None                      # non-stream responses
+    stream: Iterator[str] | None = None           # SSE frames
+    headers: dict = field(default_factory=dict)
+
+
+class ValidationError(Exception):
+    pass
+
+
+def validate_chat_request(req: dict):
+    if not isinstance(req, dict):
+        raise ValidationError("request body must be a JSON object")
+    msgs = req.get("messages")
+    if not isinstance(msgs, list) or not msgs:
+        raise ValidationError("messages must be a non-empty list")
+    if len(msgs) > MAX_MESSAGES:
+        raise ValidationError(f"too many messages (>{MAX_MESSAGES})")
+    for i, m in enumerate(msgs):
+        if not isinstance(m, dict):
+            raise ValidationError(f"messages[{i}] must be an object")
+        if m.get("role") not in VALID_ROLES:
+            raise ValidationError(f"messages[{i}].role must be one of {sorted(VALID_ROLES)}")
+        c = m.get("content")
+        if not isinstance(c, str):
+            raise ValidationError(f"messages[{i}].content must be a string")
+        if len(c) > MAX_CONTENT_CHARS:
+            raise ValidationError(f"messages[{i}].content too long")
+    mt = req.get("max_tokens", 64)
+    if not isinstance(mt, int) or not (1 <= mt <= 4096):
+        raise ValidationError("max_tokens must be an int in [1, 4096]")
+
+
+class HPCAsAPIProxy:
+    def __init__(self, backend: HPCBackend, authenticator: DualAuthenticator,
+                 rate_limiter: SlidingWindowRateLimiter | None = None):
+        self.backend = backend
+        self.auth = authenticator
+        self.limiter = rate_limiter or SlidingWindowRateLimiter()
+        self.audit_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def handle_chat_completions(self, request: dict, *, bearer: str | None,
+                                client_ip: str = "0.0.0.0") -> ProxyResponse:
+        t0 = time.perf_counter()
+        # 1. auth before ANY cluster work
+        try:
+            ident = self.auth.authenticate(bearer)
+        except AuthFailure as e:
+            self._audit(None, bearer, client_ip, 401, str(e))
+            return ProxyResponse(status=401, body=_err("invalid_api_key", str(e)))
+        # 2. rate limit
+        if not self.limiter.allow(ident.subject):
+            self._audit(ident, bearer, client_ip, 429, "rate_limited")
+            return ProxyResponse(status=429, body=_err("rate_limit_exceeded",
+                                                       "per-caller sliding window exceeded"))
+        # 3. validation
+        try:
+            validate_chat_request(request)
+        except ValidationError as e:
+            self._audit(ident, bearer, client_ip, 400, f"validation: {e}")
+            return ProxyResponse(status=400, body=_err("invalid_request_error", str(e)))
+
+        messages = request["messages"]
+        max_tokens = request.get("max_tokens", 64)
+        stream = bool(request.get("stream", True))
+        model = request.get("model", self.backend.spec.model_name)
+        rid = new_request_id()
+        self._audit(ident, bearer, client_ip, 200, "accepted", request_id=rid)
+
+        if stream:
+            return ProxyResponse(status=200,
+                                 stream=self._stream_events(rid, model, messages, max_tokens),
+                                 headers={"content-type": "text/event-stream"})
+        try:
+            result = self.backend.stream(messages, max_tokens=max_tokens)
+        except BackendError as e:
+            return ProxyResponse(status=502, body=_err("upstream_error", str(e)))
+        return ProxyResponse(status=200, body=chat_completion(
+            rid, model, result.text, prompt_tokens=result.n_prompt_tokens,
+            completion_tokens=result.n_completion_tokens))
+
+    # ------------------------------------------------------------------
+    def _stream_events(self, rid: str, model: str, messages, max_tokens) -> Iterator[str]:
+        """Generator of SSE frames; runs the dual-channel flow lazily so the
+        first frame goes out as soon as the first token lands."""
+        yield sse_event(chat_chunk(rid, model, "", role="assistant"))
+        import queue as _q
+        import threading
+        q: _q.Queue = _q.Queue()
+        box: dict = {}
+
+        def run():
+            try:
+                box["result"] = self.backend.stream(
+                    messages, max_tokens=max_tokens,
+                    on_token=lambda tid, text: q.put(text))
+            except Exception as e:  # surfaced as an SSE error frame
+                box["error"] = str(e)
+            finally:
+                q.put(None)
+
+        th = threading.Thread(target=run, daemon=True)
+        th.start()
+        while True:
+            item = q.get()
+            if item is None:
+                break
+            yield sse_event(chat_chunk(rid, model, item))
+        th.join()
+        if "error" in box:
+            yield sse_event({"error": {"message": box["error"], "type": "upstream_error"}})
+        else:
+            yield sse_event(chat_chunk(rid, model, "", finish_reason="stop"))
+        yield SSE_DONE
+
+    # ------------------------------------------------------------------
+    def _audit(self, ident, bearer, client_ip, status, note, request_id=None):
+        self.audit_log.append({
+            "ts": time.time(),
+            "caller": ident.subject if ident else "anonymous",
+            "auth_mode": ident.mode if ident else "none",
+            "credential_hash": credential_hash(bearer) if bearer else "",
+            "client_ip": client_ip,
+            "status": status,
+            "note": note,
+            "request_id": request_id,
+        })
+
+
+def _err(code: str, message: str) -> dict:
+    return {"error": {"type": code, "message": message}}

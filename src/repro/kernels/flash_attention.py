@@ -1,0 +1,117 @@
+"""Blocked causal GQA flash attention (prefill) — Pallas TPU.
+
+Grid: (B*Hq, Sq/block_q, Skv/block_k), k-dim innermost (sequential on
+TPU — the online-softmax carry lives in VMEM scratch across that dim).
+Per (bh, iq): for each k block, scores = q·kᵀ (MXU), online max/sum
+update, acc rescale; final out = acc / l written on the last unmasked
+k block. Causal blocks above the diagonal are skipped entirely
+(pl.when), so the compute volume matches the S²/2 triangle.
+
+VMEM working set per program: q (bq, D) + k,v (bk, D) + acc (bq, D)f32
++ scores (bq, bk)f32 ≈ (for 128x128xD=128) ~260 KB — far under the
+~16 MB/core VMEM budget; block sizes are MXU-aligned (multiples of 128
+in the lane dim).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale, block_q, block_k, seq_q, seq_k, causal, soft_cap):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if soft_cap > 0.0:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        if causal:
+            # q row i sits at absolute position i + (Skv - Sq), matching the
+            # reference convention for Skv > Sq (prefill continuation)
+            off = seq_k - seq_q
+            qpos = off + q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the (offset) causal diagonal
+        pl.when(k_start <= (seq_k - seq_q) + q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, logit_soft_cap=0.0,
+                    interpret=False, block_q=128, block_k=128):
+    """q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D) -> (B,Hq,Sq,D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, block_q=bq, block_k=bk, seq_q=Sq, seq_k=Sk,
+        causal=causal, soft_cap=logit_soft_cap)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, D)

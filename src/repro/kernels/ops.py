@@ -1,0 +1,92 @@
+"""Jit-ready kernel entry points with impl dispatch.
+
+Every op takes ``impl``:
+  - "ref":     pure-jnp oracle (CPU dry-run / GSPMD path)
+  - "pallas":  Pallas TPU kernel (compiled for TPU; interpret-mode on CPU
+               is used by the test suite only)
+  - "auto":    pallas on TPU backends, ref elsewhere
+
+Models call these, never ``pl.pallas_call`` directly, so flipping a
+single config bit moves the whole model between paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+# -- rmsnorm ---------------------------------------------------------------
+
+def rmsnorm(x, w, *, eps=1e-5, gemma_style=False, impl="ref", interpret=False):
+    if _resolve(impl) == "ref":
+        return _ref.rmsnorm(x, w, eps=eps, gemma_style=gemma_style)
+    from repro.kernels import rmsnorm as _k
+    return _k.rmsnorm(x, w, eps=eps, gemma_style=gemma_style, interpret=interpret)
+
+
+# -- attention -------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, scale=None, logit_soft_cap=0.0,
+                    impl="ref", interpret=False, block_q=128, block_k=128,
+                    chunk_q=None):
+    """Prefill attention. q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D)."""
+    if _resolve(impl) == "ref":
+        if q.shape[2] > 1024:  # flash-style memory without the kernel
+            import os
+            cq = chunk_q or int(os.environ.get("REPRO_ATTN_CHUNK_Q", "512"))
+            return _ref.mha_chunked(q, k, v, causal=causal, scale=scale,
+                                    logit_soft_cap=logit_soft_cap, chunk_q=cq)
+        return _ref.mha(q, k, v, causal=causal, scale=scale,
+                        logit_soft_cap=logit_soft_cap)
+    from repro.kernels import flash_attention as _k
+    return _k.flash_attention(q, k, v, causal=causal, scale=scale,
+                              logit_soft_cap=logit_soft_cap,
+                              interpret=interpret, block_q=block_q, block_k=block_k)
+
+
+def decode_attention(q, k, v, *, kv_len, scale=None, logit_soft_cap=0.0,
+                     impl="ref", interpret=False, block_k=256):
+    """Decode attention: q (B,Hq,1,D) vs cache k,v (B,Hkv,S,D), valid < kv_len."""
+    if _resolve(impl) == "ref":
+        return _ref.decode_attention(q, k, v, kv_len=kv_len, scale=scale,
+                                     logit_soft_cap=logit_soft_cap)
+    from repro.kernels import decode_attention as _k
+    return _k.decode_attention(q, k, v, kv_len=kv_len, scale=scale,
+                               logit_soft_cap=logit_soft_cap,
+                               interpret=interpret, block_k=block_k)
+
+
+# -- mamba2 ssd ------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, D, *, chunk=64, h0=None, impl="ref", interpret=False):
+    if _resolve(impl) == "ref":
+        return _ref.ssd(x, dt, A, B, C, D, chunk=chunk, h0=h0)
+    from repro.kernels import ssm_scan as _k
+    return _k.ssd(x, dt, A, B, C, D, chunk=chunk, h0=h0, interpret=interpret)
+
+
+def ssd_step(x, dt, A, B, C, D, h):
+    return _ref.ssd_step(x, dt, A, B, C, D, h)  # O(1) update; no kernel needed
+
+
+# -- quantized matmul ------------------------------------------------------
+
+def awq_matmul(x, qw, scales, zeros, *, bits=4, group_size=128,
+               impl="ref", interpret=False, block_m=128, block_n=128, block_k=256):
+    if _resolve(impl) == "ref":
+        return _ref.awq_matmul(x, qw, scales, zeros, bits=bits, group_size=group_size)
+    from repro.kernels import awq_matmul as _k
+    return _k.awq_matmul(x, qw, scales, zeros, bits=bits, group_size=group_size,
+                         interpret=interpret, block_m=block_m, block_n=block_n,
+                         block_k=block_k)

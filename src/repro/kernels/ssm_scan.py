@@ -1,0 +1,111 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU.
+
+The jnp reference materializes the (b, nc, H, L, L) decay tensor — the
+dominant memory term for the hybrid arch. This kernel streams chunks:
+grid (B, H, T/chunk) with the chunk dim innermost (sequential); the
+inter-chunk state h (P, N) lives in VMEM scratch and never touches HBM.
+Per chunk, the intra-chunk part is two MXU matmuls (C·Bᵀ masked-decay
+matrix against x) and the state update is one (P, L) x (L, N) matmul —
+everything (L=chunk, P, N) stays VMEM-resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+                h_ref, *, chunk):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L, 1)
+    A = a_ref[0, 0]                              # scalar
+    Bm = b_ref[0].astype(jnp.float32)            # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)            # (L, N)
+    Dh = d_ref[0, 0]
+
+    L = x.shape[0]
+    ld = dt[:, 0] * A                            # (L,) log-decay
+    cum = jnp.cumsum(ld)                         # inclusive
+    # intra-chunk decay matrix G[t,s] = exp(cum[t]-cum[s]) for s<=t
+    diff = cum[:, None] - cum[None, :]
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    spos = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    G = jnp.where(spos <= tpos, jnp.exp(diff), 0.0)
+
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, L)
+    M = CB * G * dt[None, :, 0]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (L, P)
+
+    # inter-chunk: y += exp(cum)[:,None] * (Cm @ h^T)
+    h = h_ref[...]                                                  # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: h' = exp(cum[-1]) * h + sum_s w[s] * x[s]^T B[s]
+    w = jnp.exp(cum[-1] - cum) * dt[:, 0]                           # (L,)
+    xw = x * w[:, None]                                             # (L, P)
+    h_new = jnp.exp(cum[-1]) * h + jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+
+    y_ref[0, 0] = (y + Dh * x).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finalize():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd(x, dt, A, B, C, D, *, chunk=64, h0=None, interpret=False):
+    """Same contract as kernels.ref.ssd. h0 must be None (prefill from
+    zero state — the decode path uses the O(1) ssd_step instead)."""
+    assert h0 is None, "kernel path starts from zero state"
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0
+    nc = T // chunk
+
+    # layout: time-major per (batch, head)
+    xt = x.transpose(0, 2, 1, 3)                  # (b, H, T, P)
+    dtt = dt.transpose(0, 2, 1)[..., None]        # (b, H, T, 1)
+    at = A.reshape(1, H, 1).repeat(b, 0)          # (b, H, 1)
+    d_in = D.reshape(1, H, 1).repeat(b, 0)
+    Bt = B                                        # (b, T, N)
+    Ct = C
+
+    y, h_last = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, 1), lambda ib, ih, ic: (ib, ih, 0)),
+            pl.BlockSpec((1, chunk, N), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, 1, 1), lambda ib, ih, ic: (ib, ih, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, H, T, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, at, Bt, Ct, d_in)
+    return y.transpose(0, 2, 1, 3), h_last

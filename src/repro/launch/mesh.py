@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing
+jax; real deployments get the same shapes from actual TPU topology.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist (tests / smoke runs on 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

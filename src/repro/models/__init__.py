@@ -1,0 +1,4 @@
+from repro.models.common import ModelConfig, ParamDef, init_params, shape_tree, spec_tree
+from repro.models.build import build_model
+
+__all__ = ["ModelConfig", "ParamDef", "init_params", "shape_tree", "spec_tree", "build_model"]

@@ -1,0 +1,28 @@
+"""Model factory: ModelConfig -> model object (shared protocol).
+
+Protocol (duck-typed; see lm.TransformerLM for the reference):
+  param_defs() / init(rng)
+  forward(params, tokens, extra=None) -> logits (B, S, padded_vocab)
+  loss(params, batch) -> (scalar, metrics)
+  init_cache(batch, max_seq) / cache_specs()
+  prefill(params, tokens, cache, extra=None) -> (last_logits, cache)
+  decode_step(params, token, cache, extra=None) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+from repro.models.common import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.ssm import HybridLM
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.xlstm import XLSTMLM
+        return XLSTMLM(cfg)
+    from repro.models.lm import TransformerLM
+    return TransformerLM(cfg)

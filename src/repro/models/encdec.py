@@ -1,0 +1,263 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (mel + strided conv stem) is a STUB per the
+assignment: ``input_specs()`` provides precomputed frame embeddings
+(B, encoder_seq_len, d_model). Everything downstream — bidirectional
+encoder, causal decoder with per-layer cross-attention, tied unembed —
+is real. Sinusoidal positions, pre-LN LayerNorm (Whisper convention).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.kernels import ops
+from repro.models.common import ModelConfig, ParamDef, init_params
+from repro.models import layers
+from repro.models.lm import _stack
+
+
+def layernorm_def(d):
+    return {"w": ParamDef((d,), ("embed",), init="ones"),
+            "b": ParamDef((d,), ("embed",), init="zeros")}
+
+
+def layernorm(x, p, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def plain_mlp_def(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamDef((d, f), ("embed", "ffn"), init="scaled"),
+        "b1": ParamDef((f,), ("ffn",), init="zeros"),
+        "w2": ParamDef((f, d), ("ffn", "embed"), init="scaled",
+                       scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        "b2": ParamDef((d,), ("embed",), init="zeros"),
+    }
+
+
+def plain_mlp(x, p):
+    h = jax.nn.gelu(x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype), approximate=True)
+    h = shard_as(h, "batch", "seq", "ffn")
+    return h @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)
+
+
+def sinusoid(positions, d_model):
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecLM:
+    """Protocol-compatible with TransformerLM: forward / prefill / decode_step.
+
+    ``extra`` must carry {"frames": (B, Senc, d_model)} — the stub
+    frontend output. ``prefill`` runs the encoder and caches per-layer
+    cross K/V; ``decode_step`` only touches the decoder.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- params
+    def _enc_block_def(self):
+        cfg = self.cfg
+        return {"ln1": layernorm_def(cfg.d_model),
+                "attn": layers.attention_def(cfg),
+                "ln2": layernorm_def(cfg.d_model),
+                "mlp": plain_mlp_def(cfg)}
+
+    def _dec_block_def(self):
+        cfg = self.cfg
+        return {"ln1": layernorm_def(cfg.d_model),
+                "self_attn": layers.attention_def(cfg),
+                "ln_x": layernorm_def(cfg.d_model),
+                "cross_attn": layers.attention_def(cfg),
+                "ln2": layernorm_def(cfg.d_model),
+                "mlp": plain_mlp_def(cfg)}
+
+    def param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": layers.embedding_def(cfg),
+            "enc_blocks": _stack(self._enc_block_def(), cfg.n_encoder_layers),
+            "enc_ln": layernorm_def(cfg.d_model),
+            "dec_blocks": _stack(self._dec_block_def(), cfg.n_layers),
+            "dec_ln": layernorm_def(cfg.d_model),
+        }
+
+    def init(self, rng):
+        return init_params(self.param_defs(), rng, self.cfg.pdtype())
+
+    # ---------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        cfg = self.cfg
+        B, S, D = frames.shape
+        x = frames.astype(cfg.cdtype()) + sinusoid(jnp.arange(S), D).astype(cfg.cdtype())
+        x = shard_as(x, "batch", "seq", "embed")
+        positions = jnp.arange(S)
+
+        def body(x, bp):
+            h = layernorm(x, bp["ln1"])
+            x = x + layers.attention(h, bp["attn"], cfg.replace(use_rope=False),
+                                     positions=positions, context=h)  # bidir (cross to self)
+            x = x + plain_mlp(layernorm(x, bp["ln2"]), bp["mlp"])
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+        return layernorm(x, params["enc_ln"])
+
+    # ---------------------------------------------------------------- decoder
+    def _dec_block(self, x, bp, *, positions, cache=None, cache_index=None,
+                   enc_out=None, cross_kv=None):
+        cfg = self.cfg
+        h = layernorm(x, bp["ln1"])
+        if cache is None:
+            a = layers.attention(h, bp["self_attn"], cfg.replace(use_rope=False),
+                                 positions=positions)
+            new_cache = None
+        else:
+            a, new_cache = layers.attention(h, bp["self_attn"], cfg.replace(use_rope=False),
+                                            positions=positions, cache=cache,
+                                            cache_index=cache_index)
+        x = x + a
+        h = layernorm(x, bp["ln_x"])
+        if cross_kv is not None:
+            ck, cv = cross_kv
+            B, S, _ = h.shape
+            H, Dh = cfg.n_heads, cfg.head_dim
+            q = (h @ bp["cross_attn"]["wq"].astype(h.dtype)).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+            out = ops.flash_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                      causal=False,
+                                      impl="pallas" if cfg.use_kernels else "ref")
+            a = out.transpose(0, 2, 1, 3).reshape(B, S, H * Dh) @ bp["cross_attn"]["wo"].astype(h.dtype)
+        else:
+            a = layers.attention(h, bp["cross_attn"], cfg.replace(use_rope=False),
+                                 positions=positions, context=enc_out)
+        x = x + a
+        x = x + plain_mlp(layernorm(x, bp["ln2"]), bp["mlp"])
+        return x, new_cache
+
+    def _embed_dec(self, tokens, params, positions):
+        cfg = self.cfg
+        x = layers.embed(tokens, params["embed"], cfg)
+        return x + sinusoid(positions, cfg.d_model).astype(x.dtype)[None]
+
+    def forward(self, params, tokens, extra=None):
+        """Teacher-forced training forward."""
+        cfg = self.cfg
+        frames = (extra or {})["frames"]
+        enc_out = self.encode(params, frames)
+        B, T = tokens.shape
+        positions = jnp.arange(T)
+        x = self._embed_dec(tokens, params, positions)
+
+        def body(x, bp):
+            x, _ = self._dec_block(x, bp, positions=positions, enc_out=enc_out)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+        x = layernorm(x, params["dec_ln"])
+        return layers.unembed(x, params["embed"], cfg)
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(self, batch, max_seq):
+        cfg = self.cfg
+        dt = cfg.cdtype()
+        L = cfg.n_layers
+        Senc = cfg.encoder_seq_len
+        return {
+            "k": jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dt),
+            "v": jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dt),
+            "cross_k": jnp.zeros((L, batch, cfg.n_kv_heads, Senc, cfg.head_dim), dt),
+            "cross_v": jnp.zeros((L, batch, cfg.n_kv_heads, Senc, cfg.head_dim), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_specs(self):
+        return {
+            "k": ("layers", "batch", "kv_heads", "kv_seq", None),
+            "v": ("layers", "batch", "kv_heads", "kv_seq", None),
+            "cross_k": ("layers", "batch", "kv_heads", None, None),
+            "cross_v": ("layers", "batch", "kv_heads", None, None),
+            "pos": (),
+        }
+
+    def _cross_kv_all(self, params, enc_out):
+        cfg = self.cfg
+
+        def one(bp):
+            B, S, _ = enc_out.shape
+            k = (enc_out @ bp["cross_attn"]["wk"].astype(enc_out.dtype)).reshape(
+                B, S, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            v = (enc_out @ bp["cross_attn"]["wv"].astype(enc_out.dtype)).reshape(
+                B, S, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            return k, v
+
+        return jax.vmap(one)(params["dec_blocks"])
+
+    def prefill(self, params, tokens, cache, extra=None):
+        cfg = self.cfg
+        frames = (extra or {})["frames"]
+        enc_out = self.encode(params, frames)
+        ck, cv = self._cross_kv_all(params, enc_out)
+        B, T = tokens.shape
+        positions = jnp.arange(T)
+        x = self._embed_dec(tokens, params, positions)
+
+        def body(x, inp):
+            bp, lc, lck, lcv = inp
+            x, nc = self._dec_block(x, bp, positions=positions, cache=lc,
+                                    cache_index=0, cross_kv=(lck, lcv))
+            return x, nc
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["dec_blocks"],
+                                             (cache["k"], cache["v"]), ck, cv))
+        x = layernorm(x, params["dec_ln"])
+        logits = layers.unembed(x[:, -1:], params["embed"], cfg)[:, 0]
+        return logits, {"k": nk, "v": nv,
+                        "cross_k": ck.astype(cache["cross_k"].dtype),
+                        "cross_v": cv.astype(cache["cross_v"].dtype),
+                        "pos": jnp.asarray(T, jnp.int32)}
+
+    def decode_step(self, params, token, cache, extra=None):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = layers.embed(token, params["embed"], cfg)
+        if pos.ndim == 0:
+            positions = pos[None]
+            x = x + sinusoid(positions, cfg.d_model).astype(x.dtype)[None]
+        else:
+            positions = pos[:, None]
+            x = x + sinusoid(pos, cfg.d_model).astype(x.dtype)[:, None]
+
+        def body(x, inp):
+            bp, lc, lck, lcv = inp
+            x, nc = self._dec_block(x, bp, positions=positions, cache=lc,
+                                    cache_index=pos, cross_kv=(lck, lcv))
+            return x, nc
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["dec_blocks"],
+                                             (cache["k"], cache["v"]),
+                                             cache["cross_k"], cache["cross_v"]))
+        x = layernorm(x, params["dec_ln"])
+        logits = layers.unembed(x, params["embed"], cfg)[:, 0]
+        return logits, {"k": nk, "v": nv, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"], "pos": pos + 1}
+
+    def loss(self, params, batch):
+        from repro.models.ssm import _lm_loss
+        return _lm_loss(self, params, batch)

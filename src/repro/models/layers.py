@@ -1,0 +1,224 @@
+"""Core transformer layers: norms, rope, embeddings, GQA attention, MLPs.
+
+All functions are pure; parameters are nested dicts built from ParamDef
+trees (see common.py). Logical sharding axes follow
+repro.distributed.sharding.DEFAULT_RULES.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.kernels import ops
+from repro.models.common import ModelConfig, ParamDef
+
+# ---------------------------------------------------------------------------
+# defs
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_def(d_model: int, gemma_style: bool = False):
+    return {"w": ParamDef((d_model,), ("embed",), init="zeros" if gemma_style else "ones")}
+
+
+def linear_def(d_in: int, d_out: int, logical=("embed", "ffn"), init="scaled", scale=1.0):
+    return {"w": ParamDef((d_in, d_out), logical, init=init, scale=scale)}
+
+
+def attention_def(cfg: ModelConfig, *, use_rope=None, cross=False):
+    """Standard (non-MLA) GQA attention parameter defs."""
+    d, q_dim, kv_dim = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    defs = {
+        "wq": ParamDef((d, q_dim), ("embed", "qkv"), init="scaled"),
+        "wk": ParamDef((d, kv_dim), ("embed", "qkv"), init="scaled"),
+        "wv": ParamDef((d, kv_dim), ("embed", "qkv"), init="scaled"),
+        "wo": ParamDef((q_dim, d), ("qkv", "embed"), init="scaled",
+                       scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cross:
+        defs["gate"] = ParamDef((1,), (None,), init="zeros")  # tanh-gated cross-attn
+    return defs
+
+
+def mlp_def(cfg: ModelConfig, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "w1": ParamDef((d, f), ("embed", "ffn"), init="scaled"),     # up / gate-in
+        "w3": ParamDef((d, f), ("embed", "ffn"), init="scaled"),     # gate
+        "w2": ParamDef((f, d), ("ffn", "embed"), init="scaled",
+                       scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def embedding_def(cfg: ModelConfig):
+    return {"w": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), init="embed")}
+
+
+# ---------------------------------------------------------------------------
+# forward fns
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, p, cfg: ModelConfig):
+    return ops.rmsnorm(x, p["w"], eps=cfg.norm_eps, gemma_style=cfg.gemma_style,
+                       impl="pallas" if cfg.use_kernels else "ref")
+
+
+def linear(x, p):
+    return x @ p["w"].astype(x.dtype)
+
+
+def embed(tokens, p, cfg: ModelConfig):
+    x = jnp.take(p["w"], tokens, axis=0).astype(cfg.cdtype())
+    if cfg.gemma_style:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    # "res_seq" is the residual-stream sequence axis: binding it to the
+    # "model" mesh axis turns the per-layer TP all-reduces into
+    # reduce-scatter/all-gather pairs (sequence parallelism; §Perf B5)
+    return shard_as(x, "batch", "res_seq", "embed")
+
+
+def unembed(x, p, cfg: ModelConfig):
+    logits = jnp.einsum("bsd,vd->bsv", x, p["w"].astype(x.dtype))
+    return shard_as(logits, "batch", "seq", "vocab")
+
+
+def rope_freqs(positions, head_dim: int, theta: float):
+    """positions (...,) -> cos,sin (..., head_dim//2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, H, S, D); cos/sin (S, D/2) or (B, S, D/2). Rotate-half convention."""
+    if cos.ndim == 2:
+        cos = cos[None, None]
+        sin = sin[None, None]
+    else:
+        cos = cos[:, None]
+        sin = sin[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _split_heads(x, n_heads, head_dim):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, S, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * D)
+
+
+def update_cache_at(buf, new, idx, axis: int):
+    """Write ``new`` into ``buf`` at position ``idx`` along ``axis``.
+    idx may be a scalar (uniform) or a (B,) vector (per-slot positions,
+    continuous batching); buf/new have a leading batch dim in that case."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), idx, axis=axis)
+    return jax.vmap(
+        lambda b, n, i: jax.lax.dynamic_update_slice_in_dim(b, n.astype(b.dtype), i, axis=axis - 1)
+    )(buf, new, idx)
+
+
+def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
+              kv_len=None, context=None, logit_soft_cap=0.0):
+    """GQA attention. Three modes:
+
+      * full/prefill:  cache is None        -> causal self-attention; if
+        ``cache_index`` is provided the computed K/V are also returned for
+        cache initialization.
+      * decode:        cache=(k, v) full-size buffers, cache_index=pos scalar
+                       -> writes the new K/V at pos, attends with kv_len mask.
+      * cross:         context=(B, Sc, D) encoder/vision states -> K/V from
+                       context, no causal mask, no rope.
+    """
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    impl = "pallas" if cfg.use_kernels else "ref"
+
+    q = _split_heads(linear(x, {"w": p["wq"]}), H, Dh)
+    kv_src = context if context is not None else x
+    k = _split_heads(kv_src @ p["wk"].astype(x.dtype), Hkv, Dh)
+    v = _split_heads(kv_src @ p["wv"].astype(x.dtype), Hkv, Dh)
+
+    is_cross = context is not None
+    if cfg.use_rope and not is_cross:
+        cos, sin = rope_freqs(positions, Dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    q = shard_as(q, "batch", "heads", "seq", None)
+    k = shard_as(k, "batch", "kv_heads", "kv_seq", None)
+    v = shard_as(v, "batch", "kv_heads", "kv_seq", None)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        if S == 1:  # decode: write at cache_index (scalar or per-slot vector)
+            ck = update_cache_at(ck, k, cache_index, axis=2)
+            cv = update_cache_at(cv, v, cache_index, axis=2)
+            new_cache = (ck, cv)
+            out = ops.decode_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                       kv_len=jnp.asarray(cache_index) + 1, impl=impl,
+                                       logit_soft_cap=logit_soft_cap)
+        else:  # prefill into cache
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), 0, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), 0, axis=2)
+            new_cache = (ck, cv)
+            out = ops.flash_attention(q, k, v, causal=True, impl=impl,
+                                      logit_soft_cap=logit_soft_cap)
+    elif is_cross:
+        out = ops.flash_attention(q, k, v, causal=False, impl=impl,
+                                  logit_soft_cap=logit_soft_cap)
+    else:
+        out = ops.flash_attention(q, k, v, causal=True, impl=impl,
+                                  logit_soft_cap=logit_soft_cap)
+
+    y = _merge_heads(out) @ p["wo"].astype(x.dtype)
+    if "gate" in p:  # gated cross-attention (llama-3.2-vision)
+        y = jnp.tanh(p["gate"].astype(x.dtype)) * y
+    y = shard_as(y, "batch", "res_seq", "embed")
+    return (y, new_cache) if cache is not None else y
+
+
+def _matmul(x, w, cfg: ModelConfig):
+    """Dense or W4A16-quantized matmul (AWQ layout; paper §2.1 Marlin
+    note — see repro/serving/quantize.py)."""
+    if isinstance(w, dict) and "qw" in w:
+        B = x.shape[:-1]
+        flat = x.reshape(-1, x.shape[-1])
+        K = w["qw"].shape[-2] * 8                      # 8 nibbles per int32
+        group_size = K // w["scales"].shape[-2]
+        out = ops.awq_matmul(flat, w["qw"], w["scales"], w["zeros"],
+                             bits=4, group_size=group_size,
+                             impl="pallas" if cfg.use_kernels else "ref")
+        return out.reshape(*B, -1)
+    return x @ w.astype(x.dtype)
+
+
+def mlp(x, p, cfg: ModelConfig, act: str | None = None):
+    """Gated MLP: SwiGLU (silu) or GeGLU (gelu)."""
+    a = act or cfg.act
+    h1 = _matmul(x, p["w1"], cfg)
+    h3 = _matmul(x, p["w3"], cfg)
+    h1 = shard_as(h1, "batch", "seq", "ffn")
+    h3 = shard_as(h3, "batch", "seq", "ffn")
+    if a == "silu":
+        h = jax.nn.silu(h1) * h3
+    elif a == "gelu":
+        h = jax.nn.gelu(h1, approximate=True) * h3
+    else:
+        raise ValueError(a)
+    y = _matmul(h, p["w2"], cfg)
+    return shard_as(y, "batch", "res_seq", "embed")

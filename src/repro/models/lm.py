@@ -1,0 +1,323 @@
+"""TransformerLM: dense / MoE / MLA / vision-cross-attn causal LM.
+
+One scanned homogeneous block stack (+ optional unstacked leading dense
+blocks for DeepSeek-V2's first_dense_layers, + a stacked side-stack of
+gated cross-attention blocks for Llama-3.2-Vision inserted every
+``cross_attn_every``-th layer).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.models.common import ModelConfig, ParamDef, init_params
+from repro.models import layers, mla as mla_mod, moe as moe_mod
+
+
+def _stack(defs, L: int):
+    return jax.tree.map(
+        lambda d: ParamDef((L,) + d.shape, ("layers",) + d.logical,
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_scan = cfg.n_layers - cfg.first_dense_layers
+        self.has_cross = cfg.cross_attn_every > 0
+        self.n_cross = (cfg.n_layers // cfg.cross_attn_every) if self.has_cross else 0
+        self.mla_absorbed = cfg.mla_absorbed_decode  # perf lever (EXPERIMENTS §Perf)
+
+    # ------------------------------------------------------------------ params
+    def _block_def(self, moe_block: bool):
+        cfg = self.cfg
+        d = {
+            "ln1": layers.rmsnorm_def(cfg.d_model, cfg.gemma_style),
+            "ln2": layers.rmsnorm_def(cfg.d_model, cfg.gemma_style),
+        }
+        if cfg.use_mla:
+            d["attn"] = mla_mod.mla_def(cfg)
+        else:
+            d["attn"] = layers.attention_def(cfg)
+        if moe_block and cfg.n_experts:
+            d["mlp"] = moe_mod.moe_def(cfg)
+        else:
+            d["mlp"] = layers.mlp_def(cfg)
+        return d
+
+    def _cross_def(self):
+        cfg = self.cfg
+        return {
+            "ln": layers.rmsnorm_def(cfg.d_model),
+            "attn": layers.attention_def(cfg, cross=True),
+        }
+
+    def param_defs(self):
+        cfg = self.cfg
+        defs = {
+            "embed": layers.embedding_def(cfg),
+            "blocks": _stack(self._block_def(moe_block=True), self.n_scan),
+            "ln_f": layers.rmsnorm_def(cfg.d_model, cfg.gemma_style),
+        }
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = {"w": ParamDef((cfg.padded_vocab, cfg.d_model),
+                                             ("vocab", "embed"), init="embed")}
+        for i in range(cfg.first_dense_layers):
+            defs[f"dense{i}"] = self._block_def(moe_block=False)
+        if self.has_cross:
+            defs["cross"] = _stack(self._cross_def(), self.n_cross)
+            if cfg.vision_dim and cfg.vision_dim != cfg.d_model:
+                defs["vis_proj"] = {"w": ParamDef((cfg.vision_dim, cfg.d_model),
+                                                  (None, "embed"), init="scaled")}
+        return defs
+
+    def init(self, rng):
+        return init_params(self.param_defs(), rng, self.cfg.pdtype())
+
+    # ------------------------------------------------------------------ blocks
+    def _attn(self, x, bp, *, positions, cache=None, cache_index=None):
+        cfg = self.cfg
+        if cfg.use_mla:
+            return mla_mod.mla_attention(x, bp, cfg, positions=positions,
+                                         cache=cache, cache_index=cache_index,
+                                         absorbed=self.mla_absorbed)
+        return layers.attention(x, bp, cfg, positions=positions,
+                                cache=cache, cache_index=cache_index)
+
+    def _mlp(self, x, bp, moe_block: bool, is_eval: bool):
+        cfg = self.cfg
+        if moe_block and cfg.n_experts:
+            cf = cfg.eval_capacity_factor if is_eval else cfg.capacity_factor
+            return moe_mod.moe_mlp(x, bp, cfg, capacity_factor=cf)
+        return layers.mlp(x, bp, cfg)
+
+    def _block(self, x, bp, *, positions, cache=None, cache_index=None,
+               moe_block=True, is_eval=False):
+        cfg = self.cfg
+        h = layers.rmsnorm(x, bp["ln1"], cfg)
+        if cache is None:
+            a = self._attn(h, bp["attn"], positions=positions)
+            new_cache = None
+        else:
+            a, new_cache = self._attn(h, bp["attn"], positions=positions,
+                                      cache=cache, cache_index=cache_index)
+        x = x + a
+        x = x + self._mlp(layers.rmsnorm(x, bp["ln2"], cfg), bp["mlp"], moe_block,
+                          is_eval or cache is not None)
+        return x, new_cache
+
+    def _cross_block(self, x, cp, context_kv):
+        """Gated cross-attention: context_kv = (k, v) precomputed (B,Hkv,Sc,Dh)."""
+        cfg = self.cfg
+        h = layers.rmsnorm(x, cp["ln"], cfg)
+        B, S, _ = h.shape
+        H, Dh = cfg.n_heads, cfg.head_dim
+        q = (h @ cp["attn"]["wq"].astype(h.dtype)).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        from repro.kernels import ops
+        k, v = context_kv
+        out = ops.flash_attention(q, k.astype(q.dtype), v.astype(q.dtype), causal=False,
+                                  impl="pallas" if cfg.use_kernels else "ref")
+        y = out.transpose(0, 2, 1, 3).reshape(B, S, H * Dh) @ cp["attn"]["wo"].astype(h.dtype)
+        y = jnp.tanh(cp["attn"]["gate"].astype(h.dtype)) * y
+        return x + y
+
+    def _vision_context(self, params, vision_embed):
+        """Stub-frontend patch embeddings -> model-dim context."""
+        if vision_embed is None:
+            return None
+        x = vision_embed.astype(self.cfg.cdtype())
+        if "vis_proj" in params:
+            x = x @ params["vis_proj"]["w"].astype(x.dtype)
+        return x
+
+    def _cross_kv_all(self, params, context):
+        """Precompute (k, v) for every cross layer: (Lc, B, Hkv, Sc, Dh)."""
+        cfg = self.cfg
+
+        def one(cp):
+            B, Sc, _ = context.shape
+            k = (context @ cp["attn"]["wk"].astype(context.dtype)).reshape(
+                B, Sc, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            v = (context @ cp["attn"]["wv"].astype(context.dtype)).reshape(
+                B, Sc, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            return k, v
+
+        return jax.vmap(one)(params["cross"])
+
+    # ------------------------------------------------------------------ forward
+    def forward(self, params, tokens, extra=None):
+        """Training forward (no cache). extra may carry {"vision": embeddings}."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = layers.embed(tokens, params["embed"], cfg)
+        positions = jnp.arange(T)
+        context = self._vision_context(params, (extra or {}).get("vision"))
+        cross_kv = self._cross_kv_all(params, context) if (self.has_cross and context is not None) else None
+
+        for i in range(cfg.first_dense_layers):
+            x, _ = self._block(x, params[f"dense{i}"], positions=positions,
+                               moe_block=False)
+
+        every = cfg.cross_attn_every
+
+        def body(x, inp):
+            bp, idx = inp
+            x, _ = self._block(x, bp, positions=positions)
+            if cross_kv is not None:
+                def do_cross(x):
+                    inv = idx // every
+                    ckv = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, inv, 0, keepdims=False), cross_kv)
+                    cp = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, inv, 0, keepdims=False), params["cross"])
+                    return self._cross_block(x, cp, ckv)
+                x = jax.lax.cond((idx % every) == (every - 1), do_cross, lambda x: x, x)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        offset = cfg.first_dense_layers
+        x, _ = jax.lax.scan(body_fn, x, (params["blocks"], offset + jnp.arange(self.n_scan)))
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return layers.unembed(x, head, cfg)
+
+    # ------------------------------------------------------------------ cache
+    def init_cache(self, batch, max_seq):
+        cfg = self.cfg
+        dt = cfg.cdtype()
+        L = self.n_scan
+        cache = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.use_mla:
+            cache["c_kv"] = jnp.zeros((L, batch, max_seq, cfg.kv_lora_rank), dt)
+            cache["k_rope"] = jnp.zeros((L, batch, max_seq, cfg.qk_rope_head_dim), dt)
+        else:
+            cache["k"] = jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dt)
+            cache["v"] = jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dt)
+        for i in range(cfg.first_dense_layers):
+            if cfg.use_mla:
+                cache[f"dense{i}_ckv"] = jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dt)
+                cache[f"dense{i}_krope"] = jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dt)
+            else:
+                cache[f"dense{i}_k"] = jnp.zeros((batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dt)
+                cache[f"dense{i}_v"] = jnp.zeros((batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dt)
+        if self.has_cross:
+            Sc = cfg.n_image_tokens
+            cache["cross_k"] = jnp.zeros((self.n_cross, batch, cfg.n_kv_heads, Sc, cfg.head_dim), dt)
+            cache["cross_v"] = jnp.zeros((self.n_cross, batch, cfg.n_kv_heads, Sc, cfg.head_dim), dt)
+        return cache
+
+    def cache_specs(self):
+        cfg = self.cfg
+        specs = {"pos": ()}
+        if cfg.use_mla:
+            specs["c_kv"] = ("layers", "batch", "kv_seq", None)
+            specs["k_rope"] = ("layers", "batch", "kv_seq", None)
+        else:
+            specs["k"] = ("layers", "batch", "kv_heads", "kv_seq", None)
+            specs["v"] = ("layers", "batch", "kv_heads", "kv_seq", None)
+        for i in range(cfg.first_dense_layers):
+            if cfg.use_mla:
+                specs[f"dense{i}_ckv"] = ("batch", "kv_seq", None)
+                specs[f"dense{i}_krope"] = ("batch", "kv_seq", None)
+            else:
+                specs[f"dense{i}_k"] = ("batch", "kv_heads", "kv_seq", None)
+                specs[f"dense{i}_v"] = ("batch", "kv_heads", "kv_seq", None)
+        if self.has_cross:
+            specs["cross_k"] = (None, "batch", "kv_heads", None, None)
+            specs["cross_v"] = (None, "batch", "kv_heads", None, None)
+        return specs
+
+    def _dense_cache(self, cache, i):
+        cfg = self.cfg
+        if cfg.use_mla:
+            return (cache[f"dense{i}_ckv"], cache[f"dense{i}_krope"])
+        return (cache[f"dense{i}_k"], cache[f"dense{i}_v"])
+
+    def _store_dense(self, cache, i, val):
+        cfg = self.cfg
+        if cfg.use_mla:
+            cache[f"dense{i}_ckv"], cache[f"dense{i}_krope"] = val
+        else:
+            cache[f"dense{i}_k"], cache[f"dense{i}_v"] = val
+        return cache
+
+    # ------------------------------------------------------------------ prefill / decode
+    def _run_cached(self, params, x, positions, cache, cache_index):
+        """Shared prefill/decode layer loop. x (B, S, D)."""
+        cfg = self.cfg
+        new_cache = dict(cache)
+        every = cfg.cross_attn_every
+        cross_kv = (cache.get("cross_k"), cache.get("cross_v")) if self.has_cross else None
+
+        for i in range(cfg.first_dense_layers):
+            x, val = self._block(x, params[f"dense{i}"], positions=positions,
+                                 cache=self._dense_cache(cache, i),
+                                 cache_index=cache_index, moe_block=False)
+            new_cache = self._store_dense(new_cache, i, val)
+
+        if cfg.use_mla:
+            layer_cache = (cache["c_kv"], cache["k_rope"])
+        else:
+            layer_cache = (cache["k"], cache["v"])
+
+        offset = cfg.first_dense_layers
+
+        def body(x, inp):
+            bp, idx, lc = inp
+            x, nc = self._block(x, bp, positions=positions, cache=lc,
+                                cache_index=cache_index)
+            if cross_kv is not None and cross_kv[0] is not None:
+                def do_cross(x):
+                    inv = idx // every
+                    ck = jax.lax.dynamic_index_in_dim(cross_kv[0], inv, 0, keepdims=False)
+                    cv = jax.lax.dynamic_index_in_dim(cross_kv[1], inv, 0, keepdims=False)
+                    cp = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, inv, 0, keepdims=False), params["cross"])
+                    return self._cross_block(x, cp, (ck, cv))
+                x = jax.lax.cond((idx % every) == (every - 1), do_cross, lambda x: x, x)
+            return x, nc
+
+        x, updated = jax.lax.scan(
+            body, x, (params["blocks"], offset + jnp.arange(self.n_scan), layer_cache))
+        if cfg.use_mla:
+            new_cache["c_kv"], new_cache["k_rope"] = updated
+        else:
+            new_cache["k"], new_cache["v"] = updated
+        return x, new_cache
+
+    def prefill(self, params, tokens, cache, extra=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = layers.embed(tokens, params["embed"], cfg)
+        positions = jnp.arange(T)
+        context = self._vision_context(params, (extra or {}).get("vision"))
+        if self.has_cross and context is not None:
+            ck, cv = self._cross_kv_all(params, context)
+            cache = dict(cache)
+            cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+            cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        x, new_cache = self._run_cached(params, x, positions, cache, cache_index=0)
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(x[:, -1:], head, cfg)[:, 0]
+        new_cache["pos"] = jnp.asarray(T, jnp.int32)
+        return logits, new_cache
+
+    def decode_step(self, params, token, cache, extra=None):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = layers.embed(token, params["embed"], cfg)
+        positions = pos[None] if pos.ndim == 0 else pos[:, None]
+        x, new_cache = self._run_cached(params, x, positions, cache, cache_index=pos)
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(x, head, cfg)[:, 0]
+        new_cache["pos"] = pos + 1
+        return logits, new_cache
+
+    def loss(self, params, batch):
+        from repro.models.ssm import _lm_loss
+        return _lm_loss(self, params, batch)

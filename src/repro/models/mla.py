@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+The KV cache stores only the compressed latent c_kv (kv_lora_rank) plus
+the shared rope key (qk_rope_head_dim) per position — the paper's
+memory win. Two decode paths:
+
+  * naive:    expand K_nope/V from the latent every step (faithful math,
+              O(S * r * H * d) expansion per step);
+  * absorbed: fold W_uk into the query and W_uv into the output
+              projection so decode attends directly against the latent
+              (the deepseek inference optimization; used as a §Perf
+              hillclimb lever — see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.kernels import ops
+from repro.models.common import ModelConfig, ParamDef
+from repro.models.layers import apply_rope, rope_freqs
+
+
+def mla_def(cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale_o = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "wq": ParamDef((d, H * (dn + dr)), ("embed", "qkv"), init="scaled"),
+        "wdkv": ParamDef((d, r), ("embed", None), init="scaled"),
+        "wkr": ParamDef((d, dr), ("embed", None), init="scaled"),
+        "kv_norm": ParamDef((r,), (None,), init="ones"),
+        "wuk": ParamDef((r, H * dn), (None, "qkv"), init="scaled"),
+        "wuv": ParamDef((r, H * dv), (None, "qkv"), init="scaled"),
+        "wo": ParamDef((H * dv, d), ("qkv", "embed"), init="scaled", scale=scale_o),
+    }
+
+
+def _norm(x, w, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
+                  absorbed: bool = False):
+    """x (B, S, D). cache = (c_kv (B, Smax, r), k_rope (B, Smax, dr)) or None.
+
+    Returns y (or (y, new_cache) when cache is given).
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+    impl = "pallas" if cfg.use_kernels else "ref"
+
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_kv = _norm(x @ p["wdkv"].astype(x.dtype), p["kv_norm"], cfg.norm_eps)   # (B, S, r)
+    k_rope = apply_rope((x @ p["wkr"].astype(x.dtype))[:, None], cos, sin)[:, 0]  # (B,S,dr)
+
+    new_cache = None
+    if cache is not None:
+        from repro.models.layers import update_cache_at
+        cc, cr = cache
+        at = cache_index if S == 1 else 0
+        cc = update_cache_at(cc, c_kv, at, axis=1)
+        cr = update_cache_at(cr, k_rope, at, axis=1)
+        new_cache = (cc, cr)
+        if S == 1:  # decode: attend against the cache, masked to kv_len
+            kv_latent, k_rope_all = cc.astype(x.dtype), cr.astype(x.dtype)
+            Skv = kv_latent.shape[1]
+            kv_len = cache_index + 1
+        else:  # prefill: attend against the fresh latents (cache tail is junk)
+            kv_latent, k_rope_all = c_kv, k_rope
+            Skv = S
+            kv_len = None
+    else:
+        kv_latent, k_rope_all = c_kv, k_rope
+        Skv = S
+        kv_len = None
+
+    kv_latent = shard_as(kv_latent, "batch", "kv_seq", None)
+
+    if absorbed and S == 1:
+        # fold W_uk into q: q_lat (B,H,1,r) attends against the latent directly
+        wuk = p["wuk"].astype(x.dtype).reshape(r, H, dn)
+        q_lat = jnp.einsum("bhsd,rhd->bhsr", q_nope, wuk)            # (B,H,1,r)
+        lat_k = kv_latent[:, None]                                   # (B,1,Skv,r)
+        rope_k = k_rope_all[:, None]                                 # (B,1,Skv,dr)
+        logits = (jnp.einsum("bhsr,bokr->bhsk", q_lat.astype(jnp.float32), lat_k.astype(jnp.float32))
+                  + jnp.einsum("bhsd,bokd->bhsk", q_rope.astype(jnp.float32), rope_k.astype(jnp.float32))) * scale
+        if kv_len is not None:
+            kl = jnp.asarray(kv_len)
+            if kl.ndim:
+                kl = kl.reshape(-1, 1, 1, 1)
+            mask = jnp.arange(Skv)[None, None, None, :] < kl
+            logits = jnp.where(mask, logits, -1e30)
+        pr = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhsk,bokr->bhsr", pr, lat_k.astype(jnp.float32))   # (B,H,1,r)
+        wuv = p["wuv"].astype(jnp.float32).reshape(r, H, dv)
+        out = jnp.einsum("bhsr,rhd->bhsd", ctx, wuv).astype(x.dtype)
+    else:
+        # naive: expand full K_nope / V from the latent
+        k_nope = (kv_latent @ p["wuk"].astype(x.dtype)).reshape(B, Skv, H, dn).transpose(0, 2, 1, 3)
+        vv = (kv_latent @ p["wuv"].astype(x.dtype)).reshape(B, Skv, H, dv).transpose(0, 2, 1, 3)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_all[:, None], (B, H, Skv, dr))], axis=-1)
+        # pad V to qk head dim so the fused attention core can be reused
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if cache is not None and S == 1:
+            out = ops.decode_attention(q_full, k_full, _pad_v(vv, dn + dr),
+                                       kv_len=kv_len, scale=scale, impl=impl)[..., :dv]
+        else:
+            out = ops.flash_attention(q_full, k_full, _pad_v(vv, dn + dr),
+                                      causal=True, scale=scale, impl=impl)[..., :dv]
+
+    y = out.transpose(0, 2, 1, 3).reshape(B, S, H * dv) @ p["wo"].astype(x.dtype)
+    y = shard_as(y, "batch", "seq", "embed")
+    return (y, new_cache) if cache is not None else y
+
+
+def _pad_v(v, d_target):
+    pad = d_target - v.shape[-1]
+    if pad <= 0:
+        return v
+    return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))

@@ -1,0 +1,338 @@
+"""Mamba-2 block and the Zamba2-style hybrid LM.
+
+Zamba2 = a backbone of Mamba-2 layers with ONE shared transformer block
+(full attention + MLP) invoked every ``attn_every``-th layer. The shared
+block's KV cache therefore has one entry per *invocation*, not per
+layer: (n_invocations, B, Hkv, S, Dh).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.kernels import ops
+from repro.models.common import ModelConfig, ParamDef, init_params
+from repro.models import layers
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_def(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    conv_dim = di + 2 * N
+    return {
+        "ln": layers.rmsnorm_def(d, cfg.gemma_style),
+        "in_proj": ParamDef((d, 2 * di + 2 * N + H), ("embed", "ffn"), init="scaled"),
+        "conv_w": ParamDef((cfg.ssm_conv_kernel, conv_dim), ("conv", "ffn"), init="scaled"),
+        "conv_b": ParamDef((conv_dim,), ("ffn",), init="zeros"),
+        "dt_bias": ParamDef((H,), (None,), init="ssm_dt"),
+        "A_log": ParamDef((H,), (None,), init="ssm_a"),
+        "D": ParamDef((H,), (None,), init="ones"),
+        "out_norm": ParamDef((di,), ("ffn",), init="ones"),
+        "out_proj": ParamDef((di, d), ("ffn", "embed"), init="scaled",
+                             scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B, T, C), w (K, C) -> (B, T, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is 4; unrolled adds, no conv primitive needed
+        out = out + xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """x_t (B, C), conv_state (B, K-1, C) -> (y_t, new_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)     # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
+    return y, window[:, 1:, :]
+
+
+def _split_inproj(h, cfg: ModelConfig):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = h[..., :di]
+    xbc = h[..., di : di + di + 2 * N]
+    dt = h[..., di + di + 2 * N :]
+    return z, xbc, dt
+
+
+def mamba2_block(x, p, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
+    """x (B, T, D). When conv_state/ssm_state given and T==1, runs the
+    recurrent step; otherwise the chunked SSD scan (training/prefill).
+    Returns (y, new_conv_state, new_ssm_state) — states None outside decode.
+    """
+    B, T, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    impl = "pallas" if cfg.use_kernels else "ref"
+
+    resid = x
+    xn = layers.rmsnorm(x, p["ln"], cfg)
+    h = xn @ p["in_proj"].astype(x.dtype)                               # (B,T,2di+2N+H)
+    h = shard_as(h, "batch", "seq", "ffn")
+    z, xbc, dt = _split_inproj(h, cfg)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    if conv_state is not None and T == 1:
+        c_out, new_conv = _conv_step(xbc[:, 0], conv_state, p["conv_w"], p["conv_b"])
+        c_out = jax.nn.silu(c_out)
+        xs, Bm, Cm = c_out[:, :di], c_out[:, di : di + N], c_out[:, di + N :]
+        y, new_ssm = ops.ssd_step(xs.reshape(B, H, P), dt[:, 0], A, Bm, Cm,
+                                  p["D"].astype(jnp.float32), ssm_state)
+        y = y.reshape(B, 1, di)
+        new_states = (new_conv, new_ssm)
+    else:
+        c_out = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        xs, Bm, Cm = c_out[..., :di], c_out[..., di : di + N], c_out[..., di + N :]
+        pad = (-T) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dtp = dt
+        y, h_last = ops.ssd(xs.reshape(B, T + pad, H, P), dtp.reshape(B, T + pad, H),
+                            A, Bm, Cm, p["D"].astype(jnp.float32),
+                            chunk=cfg.ssm_chunk, impl=impl)
+        y = y[:, :T].reshape(B, T, di)
+        new_states = (None, h_last) if conv_state is None else (
+            _prefill_conv_state(xbc, cfg), h_last)
+
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * p["out_norm"].astype(jnp.float32)).astype(x.dtype)
+    out = resid + y @ p["out_proj"].astype(x.dtype)
+    out = shard_as(out, "batch", "seq", "embed")
+    return out, new_states[0], new_states[1]
+
+
+def _prefill_conv_state(xbc, cfg: ModelConfig):
+    """Last K-1 inputs of the conv, for continuing in decode."""
+    K = cfg.ssm_conv_kernel
+    T = xbc.shape[1]
+    if T >= K - 1:
+        return xbc[:, T - (K - 1) :, :]
+    return jnp.pad(xbc, ((0, 0), (K - 1 - T, 0), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid LM
+# ---------------------------------------------------------------------------
+
+
+class HybridLM:
+    """Mamba-2 backbone + shared attention/MLP block every k layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.attn_every > 0
+        self.cfg = cfg
+        self.n_invocations = cfg.n_layers // cfg.attn_every
+
+    # ---- params ----
+    def param_defs(self):
+        cfg = self.cfg
+        L = cfg.n_layers
+
+        def stack(defs):
+            return jax.tree.map(
+                lambda d: ParamDef((L,) + d.shape, ("layers",) + d.logical,
+                                   init=d.init, scale=d.scale, dtype=d.dtype),
+                defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+        return {
+            "embed": layers.embedding_def(cfg),
+            "blocks": stack(mamba2_def(cfg)),
+            "shared": {
+                "ln1": layers.rmsnorm_def(cfg.d_model),
+                "attn": layers.attention_def(cfg),
+                "ln2": layers.rmsnorm_def(cfg.d_model),
+                "mlp": layers.mlp_def(cfg),
+            },
+            "ln_f": layers.rmsnorm_def(cfg.d_model, cfg.gemma_style),
+            "lm_head": {"w": ParamDef((cfg.padded_vocab, cfg.d_model),
+                                      ("vocab", "embed"), init="embed")},
+        }
+
+    def init(self, rng):
+        return init_params(self.param_defs(), rng, self.cfg.pdtype())
+
+    # ---- shared attention block ----
+    def _shared_block(self, x, sp, *, positions, cache=None, inv=None, pos=None):
+        cfg = self.cfg
+        h = layers.rmsnorm(x, sp["ln1"], cfg)
+        if cache is None:
+            a = layers.attention(h, sp["attn"], cfg, positions=positions)
+            new_cache = None
+        else:
+            ck, cv = cache   # (n_inv, B, Hkv, S, Dh)
+            k_i = jax.lax.dynamic_index_in_dim(ck, inv, 0, keepdims=False)
+            v_i = jax.lax.dynamic_index_in_dim(cv, inv, 0, keepdims=False)
+            a, (nk, nv) = layers.attention(h, sp["attn"], cfg, positions=positions,
+                                           cache=(k_i, v_i), cache_index=pos)
+            ck = jax.lax.dynamic_update_index_in_dim(ck, nk, inv, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, nv, inv, 0)
+            new_cache = (ck, cv)
+        x = x + a
+        x = x + layers.mlp(layers.rmsnorm(x, sp["ln2"], cfg), sp["mlp"], cfg)
+        return x, new_cache
+
+    # ---- training forward ----
+    def forward(self, params, tokens, extra=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = layers.embed(tokens, params["embed"], cfg)
+        positions = jnp.arange(T)
+        k = cfg.attn_every
+
+        def body(carry, inp):
+            x = carry
+            bp, idx = inp
+            x, _, _ = mamba2_block(x, bp, cfg)
+            x = jax.lax.cond(
+                (idx % k) == (k - 1),
+                lambda x: self._shared_block(x, params["shared"], positions=positions)[0],
+                lambda x: x,
+                x)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        return layers.unembed(x, params["lm_head"], cfg)
+
+    # ---- cache ----
+    def init_cache(self, batch, max_seq):
+        cfg = self.cfg
+        L, K = cfg.n_layers, cfg.ssm_conv_kernel
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        dt = cfg.cdtype()
+        return {
+            "conv": jnp.zeros((L, batch, K - 1, conv_dim), dt),
+            "ssm": jnp.zeros((L, batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                             jnp.float32),
+            "attn_k": jnp.zeros((self.n_invocations, batch, cfg.n_kv_heads, max_seq,
+                                 cfg.head_dim), dt),
+            "attn_v": jnp.zeros((self.n_invocations, batch, cfg.n_kv_heads, max_seq,
+                                 cfg.head_dim), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_specs(self):
+        return {
+            "conv": ("layers", "batch", None, "ffn"),
+            "ssm": ("layers", "batch", "heads", None, None),
+            "attn_k": (None, "batch", "kv_heads", "kv_seq", None),
+            "attn_v": (None, "batch", "kv_heads", "kv_seq", None),
+            "pos": (),
+        }
+
+    # ---- prefill ----
+    def prefill(self, params, tokens, cache, extra=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = layers.embed(tokens, params["embed"], cfg)
+        positions = jnp.arange(T)
+        k = cfg.attn_every
+
+        def body(carry, inp):
+            x, ak, av = carry
+            bp, idx = inp
+            xm, conv_st, ssm_st = mamba2_block(x, bp, cfg, conv_state=jnp.zeros(()),
+                                               ssm_state=None)
+            # conv/ssm states returned because conv_state sentinel non-None
+            def with_attn(args):
+                x, ak, av = args
+                inv = idx // k
+                x, (ak, av) = self._shared_block(x, params["shared"], positions=positions,
+                                                 cache=(ak, av), inv=inv, pos=0)
+                return x, ak, av
+
+            x, ak, av = jax.lax.cond((idx % k) == (k - 1), with_attn,
+                                     lambda a: a, (xm, ak, av))
+            return (x, ak, av), (conv_st, ssm_st)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, ak, av), (conv, ssm) = jax.lax.scan(
+            body_fn, (x, cache["attn_k"], cache["attn_v"]),
+            (params["blocks"], jnp.arange(cfg.n_layers)))
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        logits = layers.unembed(x[:, -1:], params["lm_head"], cfg)[:, 0]
+        new_cache = {"conv": conv.astype(cache["conv"].dtype), "ssm": ssm,
+                     "attn_k": ak, "attn_v": av,
+                     "pos": jnp.asarray(T, jnp.int32)}
+        return logits, new_cache
+
+    # ---- decode ----
+    def decode_step(self, params, token, cache, extra=None):
+        cfg = self.cfg
+        B = token.shape[0]
+        pos = cache["pos"]
+        x = layers.embed(token, params["embed"], cfg)        # (B, 1, D)
+        positions = pos[None] if pos.ndim == 0 else pos[:, None]
+        k = cfg.attn_every
+
+        def body(carry, inp):
+            x, ak, av = carry
+            bp, idx, conv_st, ssm_st = inp
+            x, new_conv, new_ssm = mamba2_block(x, bp, cfg, conv_state=conv_st,
+                                                ssm_state=ssm_st)
+
+            def with_attn(args):
+                x, ak, av = args
+                inv = idx // k
+                x, (ak, av) = self._shared_block(x, params["shared"], positions=positions,
+                                                 cache=(ak, av), inv=inv, pos=pos)
+                return x, ak, av
+
+            x, ak, av = jax.lax.cond((idx % k) == (k - 1), with_attn,
+                                     lambda a: a, (x, ak, av))
+            return (x, ak, av), (new_conv, new_ssm)
+
+        (x, ak, av), (conv, ssm) = jax.lax.scan(
+            body, (x, cache["attn_k"], cache["attn_v"]),
+            (params["blocks"], jnp.arange(cfg.n_layers), cache["conv"], cache["ssm"]))
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        logits = layers.unembed(x, params["lm_head"], cfg)[:, 0]
+        new_cache = {"conv": conv, "ssm": ssm, "attn_k": ak, "attn_v": av,
+                     "pos": pos + 1}
+        return logits, new_cache
+
+    def loss(self, params, batch):
+        return _lm_loss(self, params, batch)
+
+
+def _lm_loss(model, params, batch):
+    """Shared next-token loss: batch = {tokens, loss_mask?}."""
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    logits = model.forward(params, tokens[:, :-1], batch.get("extra"))
+    labels = tokens[:, 1:]
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab columns (iota+select partitions cleanly under GSPMD)
+    V = cfg.vocab_size
+    if cfg.padded_vocab != V:
+        valid = jnp.arange(cfg.padded_vocab) < V
+        logits = jnp.where(valid, logits, -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:]
+        return (nll * mask).sum() / jnp.clip(mask.sum(), 1.0), {"nll": nll.mean()}
+    return nll.mean(), {"nll": nll.mean()}

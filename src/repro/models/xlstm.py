@@ -1,0 +1,305 @@
+"""xLSTM language model: mLSTM (matrix memory) + sLSTM (scalar memory) blocks.
+
+Layout follows the xLSTM paper's 125M-scale recipe: mostly mLSTM blocks
+with an sLSTM block every ``xlstm_slstm_every``-th layer. Both cells are
+true recurrences -> O(1) decode state, which is why this arch runs the
+long_500k shape. Training/prefill use a time-major lax.scan (the
+recurrence is elementwise; projections dominate FLOPs).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_as
+from repro.models.common import ModelConfig, ParamDef, init_params
+from repro.models import layers
+
+
+def _pf_dim(cfg: ModelConfig) -> int:
+    return int(cfg.xlstm_proj_factor * cfg.d_model)
+
+
+def mlstm_def(cfg: ModelConfig):
+    d = cfg.d_model
+    u = _pf_dim(cfg)
+    H = cfg.n_heads
+    return {
+        "ln": layers.rmsnorm_def(d),
+        "up": ParamDef((d, 2 * u), ("embed", "ffn"), init="scaled"),
+        "conv_w": ParamDef((4, u), ("conv", "ffn"), init="scaled"),
+        "conv_b": ParamDef((u,), ("ffn",), init="zeros"),
+        "wq": ParamDef((u, u), ("ffn", "qkv"), init="scaled"),
+        "wk": ParamDef((u, u), ("ffn", "qkv"), init="scaled"),
+        "wv": ParamDef((u, u), ("ffn", "qkv"), init="scaled"),
+        "wi": ParamDef((u, H), ("ffn", None), init="scaled"),
+        "wf": ParamDef((u, H), ("ffn", None), init="scaled"),
+        "fb": ParamDef((H,), (None,), init="ones"),     # forget-gate bias > 0
+        "out_norm": ParamDef((u,), ("ffn",), init="ones"),
+        "down": ParamDef((u, d), ("ffn", "embed"), init="scaled",
+                         scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def slstm_def(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    f = int(8 * d / 3)
+    return {
+        "ln": layers.rmsnorm_def(d),
+        "wx": ParamDef((d, 4 * d), ("embed", "qkv"), init="scaled"),
+        "r": ParamDef((H, dh, 4 * dh), (None, None, None), init="scaled"),
+        "fb": ParamDef((H, dh), (None, None), init="ones"),
+        "ln2": layers.rmsnorm_def(d),
+        "up": ParamDef((d, f), ("embed", "ffn"), init="scaled"),
+        "gate": ParamDef((d, f), ("embed", "ffn"), init="scaled"),
+        "down": ParamDef((f, d), ("ffn", "embed"), init="scaled",
+                         scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cells (single step, fp32 state math)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_cell_step(q, k, v, i_pre, f_pre, state):
+    """q,k,v (B,H,dh); i_pre,f_pre (B,H); state=(C,n,m)."""
+    C, n, m = state
+    dh = q.shape[-1]
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i_pre = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    kf = k.astype(jnp.float32) / math.sqrt(dh)
+    vf = v.astype(jnp.float32)
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] * (vf[..., :, None] * kf[..., None, :])
+    n_new = f_g[..., None] * n + i_g[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, qf)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+def slstm_cell_step(preact, state):
+    """preact (B,H,dh,4) = [i,f,z,o] pre-activations; state=(c,n,h,m)."""
+    c, n, h, m = state
+    i_pre = preact[..., 0].astype(jnp.float32)
+    f_pre = preact[..., 1].astype(jnp.float32)
+    z = jnp.tanh(preact[..., 2].astype(jnp.float32))
+    o = jax.nn.sigmoid(preact[..., 3].astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, (c_new, n_new, h_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block(x, p, cfg: ModelConfig, state=None):
+    """x (B,T,D). state=(conv_state (B,3,u), C, n, m) or None (from zeros).
+    Returns (y, new_state)."""
+    from repro.models.ssm import _causal_conv, _conv_step  # shared helpers
+
+    B, T, D = x.shape
+    u = _pf_dim(cfg)
+    H = cfg.n_heads
+    dh = u // H
+
+    resid = x
+    xn = layers.rmsnorm(x, p["ln"], cfg)
+    up = xn @ p["up"].astype(x.dtype)
+    up = shard_as(up, "batch", "seq", "ffn")
+    uu, z = up[..., :u], up[..., u:]
+
+    if state is None:
+        conv_state = jnp.zeros((B, 3, u), x.dtype)
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        conv_state, C0, n0, m0 = state
+
+    if T == 1 and state is not None:
+        c_out, new_conv = _conv_step(uu[:, 0], conv_state, p["conv_w"], p["conv_b"])
+        c_out = jax.nn.silu(c_out)[:, None]
+    else:
+        c_out = jax.nn.silu(_causal_conv(uu, p["conv_w"], p["conv_b"]))
+        K = p["conv_w"].shape[0]
+        new_conv = jnp.pad(uu, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):, :]
+
+    q = (c_out @ p["wq"].astype(x.dtype)).reshape(B, -1, H, dh)
+    k = (c_out @ p["wk"].astype(x.dtype)).reshape(B, -1, H, dh)
+    v = (uu @ p["wv"].astype(x.dtype)).reshape(B, -1, H, dh)
+    i_pre = c_out @ p["wi"].astype(x.dtype)                      # (B,T,H)
+    f_pre = c_out @ p["wf"].astype(x.dtype) + p["fb"].astype(x.dtype)
+
+    def step(carry, inp):
+        qt, kt, vt, it, ft = inp
+        h, new = mlstm_cell_step(qt, kt, vt, it, ft, carry)
+        return new, h
+
+    (Cn, nn_, mn), hs = jax.lax.scan(
+        step, (C0, n0, m0),
+        (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+         i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2)))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, -1, u)               # (B,T,u)
+
+    hf = h.astype(jnp.float32)
+    h = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + cfg.norm_eps)
+         * p["out_norm"].astype(jnp.float32)).astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ p["down"].astype(x.dtype)
+    y = shard_as(y, "batch", "seq", "embed")
+    return resid + y, (new_conv, Cn, nn_, mn)
+
+
+def slstm_block(x, p, cfg: ModelConfig, state=None):
+    """x (B,T,D). state=(c,n,h,m) each (B,H,dh) or None."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+
+    resid = x
+    xn = layers.rmsnorm(x, p["ln"], cfg)
+    wx = (xn @ p["wx"].astype(x.dtype)).reshape(B, T, H, dh, 4)
+
+    if state is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((B, H, dh), -1e30, jnp.float32))
+
+    r = p["r"].astype(jnp.float32)
+    fb = p["fb"].astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        pre_x = inp.astype(jnp.float32)                          # (B,H,dh,4)
+        pre_r = jnp.einsum("bhd,hdk->bhk", h, r).reshape(B, H, dh, 4)
+        pre = pre_x + pre_r
+        pre = pre.at[..., 1].add(fb)
+        h_new, new_state = slstm_cell_step(pre, (c, n, h, m))
+        return new_state, h_new
+
+    new_state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, D).astype(x.dtype)
+    x = resid + h
+
+    # post-FFN (GLU)
+    xn = layers.rmsnorm(x, p["ln2"], cfg)
+    hh = jax.nn.silu(xn @ p["up"].astype(x.dtype)) * (xn @ p["gate"].astype(x.dtype))
+    hh = shard_as(hh, "batch", "seq", "ffn")
+    y = hh @ p["down"].astype(x.dtype)
+    return x + shard_as(y, "batch", "seq", "embed"), new_state
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        k = cfg.xlstm_slstm_every
+        self.is_slstm = [k > 0 and (i % k) == (k - 1) for i in range(cfg.n_layers)]
+
+    def param_defs(self):
+        cfg = self.cfg
+        blocks = {}
+        for i in range(cfg.n_layers):  # heterogeneous -> per-layer dict, no scan
+            blocks[f"l{i}"] = slstm_def(cfg) if self.is_slstm[i] else mlstm_def(cfg)
+        return {
+            "embed": layers.embedding_def(cfg),
+            "blocks": blocks,
+            "ln_f": layers.rmsnorm_def(cfg.d_model),
+            "lm_head": {"w": ParamDef((cfg.padded_vocab, cfg.d_model),
+                                      ("vocab", "embed"), init="embed")},
+        }
+
+    def init(self, rng):
+        return init_params(self.param_defs(), rng, self.cfg.pdtype())
+
+    def _run_blocks(self, params, x, states=None):
+        cfg = self.cfg
+        new_states = {}
+        for i in range(cfg.n_layers):
+            bp = params["blocks"][f"l{i}"]
+            st = None if states is None else states[f"l{i}"]
+            if self.is_slstm[i]:
+                x, ns = slstm_block(x, bp, cfg, st)
+            else:
+                x, ns = mlstm_block(x, bp, cfg, st)
+            new_states[f"l{i}"] = ns
+        return x, new_states
+
+    def forward(self, params, tokens, extra=None):
+        x = layers.embed(tokens, params["embed"], self.cfg)
+        x, _ = self._run_blocks(params, x)
+        x = layers.rmsnorm(x, params["ln_f"], self.cfg)
+        return layers.unembed(x, params["lm_head"], self.cfg)
+
+    def init_cache(self, batch, max_seq):
+        cfg = self.cfg
+        u = _pf_dim(cfg)
+        H = cfg.n_heads
+        dh_m = u // H
+        dh_s = cfg.d_model // H
+        dt = cfg.cdtype()
+        cache = {}
+        for i in range(cfg.n_layers):
+            if self.is_slstm[i]:
+                z = jnp.zeros((batch, H, dh_s), jnp.float32)
+                cache[f"l{i}"] = (z, z, z, jnp.full((batch, H, dh_s), -1e30, jnp.float32))
+            else:
+                cache[f"l{i}"] = (
+                    jnp.zeros((batch, 3, u), dt),
+                    jnp.zeros((batch, H, dh_m, dh_m), jnp.float32),
+                    jnp.zeros((batch, H, dh_m), jnp.float32),
+                    jnp.full((batch, H), -1e30, jnp.float32),
+                )
+        return {"states": cache, "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_specs(self):
+        cache = {}
+        for i in range(self.cfg.n_layers):
+            if self.is_slstm[i]:
+                s = ("batch", "heads", None)
+                cache[f"l{i}"] = (s, s, s, s)
+            else:
+                cache[f"l{i}"] = (("batch", None, "ffn"),
+                                  ("batch", "heads", None, None),
+                                  ("batch", "heads", None),
+                                  ("batch", "heads"))
+        return {"states": cache, "pos": ()}
+
+    def prefill(self, params, tokens, cache, extra=None):
+        cfg = self.cfg
+        x = layers.embed(tokens, params["embed"], cfg)
+        x, states = self._run_blocks(params, x, cache["states"])
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        logits = layers.unembed(x[:, -1:], params["lm_head"], cfg)[:, 0]
+        return logits, {"states": states, "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+    def decode_step(self, params, token, cache, extra=None):
+        cfg = self.cfg
+        x = layers.embed(token, params["embed"], cfg)
+        x, states = self._run_blocks(params, x, cache["states"])
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        logits = layers.unembed(x, params["lm_head"], cfg)[:, 0]
+        return logits, {"states": states, "pos": cache["pos"] + 1}
+
+    def loss(self, params, batch):
+        from repro.models.ssm import _lm_loss
+        return _lm_loss(self, params, batch)

@@ -1,0 +1,6 @@
+from repro.serving.engine import ServingEngine, GenerationResult
+from repro.serving.tokenizer import ByteTokenizer
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+__all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
+           "ContinuousBatcher", "Request"]

@@ -1,0 +1,139 @@
+"""ServingEngine: jitted prefill/decode generation over any model.
+
+This is the per-tier inference backend. ``generate`` yields tokens
+through an ``on_token`` callback *as they are produced* — the producer
+side of the paper's data plane plugs in here. ``generate_batch`` runs a
+fixed batch. Streaming vs batch-fallback TTFT in the Table-2 benchmark
+both run through this engine; only the delivery path differs.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.models.common import ModelConfig
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclass
+class GenerationResult:
+    tokens: list
+    text: str
+    ttft_s: float               # time to first token (from generate() entry)
+    total_s: float
+    tok_per_s: float
+    n_prompt: int
+    n_generated: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, *, params=None, rng=None,
+                 max_seq: int = 256, sampler: SamplerConfig | None = None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.rng = rng
+        self.params = params if params is not None else self.model.init(rng)
+        self.max_seq = max_seq
+        self.tokenizer = ByteTokenizer(cfg.vocab_size)
+        self.sampler = sampler or SamplerConfig(vocab_size=cfg.vocab_size)
+
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+        self._warm = False
+
+    def _bucket(self, n: int) -> int:
+        """Prompts are left-padded to power-of-two buckets so prefill
+        compiles once per bucket, not once per prompt length."""
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_seq - 1)
+
+    def warmup(self, batch: int = 1, buckets=(16, 32, 64)):
+        """Compile prefill (per bucket) + decode so benchmarks measure
+        steady state, not XLA compilation."""
+        for b in buckets:
+            if b >= self.max_seq:
+                continue
+            toks = jnp.zeros((batch, b), jnp.int32)
+            cache = self.model.init_cache(batch, self.max_seq)
+            last, cache = self._prefill(self.params, toks, cache)
+        tok = jnp.argmax(last, -1)[:, None]
+        self._decode(self.params, tok, cache)
+        _ = sample(last, jax.random.PRNGKey(0), self.sampler)
+        self._warm = True
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: str | list, *, max_new_tokens: int = 32,
+                 on_token: Optional[Callable[[int, str], None]] = None,
+                 stop_on_eos: bool = True) -> GenerationResult:
+        """Single-request generation with per-token streaming callback."""
+        t0 = time.perf_counter()
+        if isinstance(prompt, str):
+            ids = self.tokenizer.encode(prompt)
+        else:
+            ids = list(prompt)
+        ids = ids[: self.max_seq - max_new_tokens - 1]
+        bucket = self._bucket(len(ids))
+        ids_p = [self.tokenizer.pad_id] * (bucket - len(ids)) + ids  # left-pad
+        toks = jnp.asarray([ids_p], jnp.int32)
+
+        cache = self.model.init_cache(1, self.max_seq)
+        logits, cache = self._prefill(self.params, toks, cache)
+        self.rng, k = jax.random.split(self.rng)
+        tok = sample(logits, k, self.sampler)[:, None]
+
+        first = int(tok[0, 0])
+        ttft = time.perf_counter() - t0
+        out = [first]
+        if on_token:
+            on_token(first, self.tokenizer.decode_token(first))
+
+        for i in range(max_new_tokens - 1):
+            if stop_on_eos and out[-1] == self.tokenizer.eos_id:
+                break
+            logits, cache = self._decode(self.params, tok, cache)
+            self.rng, k = jax.random.split(self.rng)
+            tok = sample(logits, k, self.sampler)[:, None]
+            t = int(tok[0, 0])
+            out.append(t)
+            if on_token:
+                on_token(t, self.tokenizer.decode_token(t))
+
+        total = time.perf_counter() - t0
+        return GenerationResult(
+            tokens=out, text=self.tokenizer.decode(out), ttft_s=ttft,
+            total_s=total, tok_per_s=len(out) / max(total - ttft, 1e-9),
+            n_prompt=len(ids), n_generated=len(out))
+
+    # ------------------------------------------------------------------
+    def generate_batch(self, prompts: list[str], *, max_new_tokens: int = 32):
+        """Fixed-batch generation (benchmark path; right-padded prompts)."""
+        B = len(prompts)
+        enc = [self.tokenizer.encode(p) for p in prompts]
+        L = self._bucket(max(len(e) for e in enc))
+        toks = np.full((B, L), self.tokenizer.pad_id, np.int32)
+        for i, e in enumerate(enc):
+            toks[i, L - len(e):] = e  # left-pad so last position is real
+        cache = self.model.init_cache(B, self.max_seq)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        outs = [[] for _ in range(B)]
+        tok = jnp.argmax(logits, -1)[:, None]
+        for i in range(B):
+            outs[i].append(int(tok[i, 0]))
+        for _ in range(max_new_tokens - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            self.rng, k = jax.random.split(self.rng)
+            tok = sample(logits, k, self.sampler)[:, None]
+            for i in range(B):
+                outs[i].append(int(tok[i, 0]))
+        return [self.tokenizer.decode(o) for o in outs], outs

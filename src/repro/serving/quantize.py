@@ -1,0 +1,88 @@
+"""W4A16 (AWQ-layout) weight quantization for the serving path.
+
+The paper's HPC tier serves Qwen-72B-AWQ, and its one kernel-level perf
+note is the silently-disabled Marlin AWQ kernels (§2.1). This module is
+the serving-side integration of our TPU-native equivalent
+(`repro/kernels/awq_matmul.py`): quantize a trained model's gated-MLP
+weights to int4 with group-wise scales/zeros; `repro.models.layers.mlp`
+detects quantized leaves and routes through `ops.awq_matmul` (ref path
+on CPU, Pallas kernel on TPU).
+
+MLP weights are ~2/3 of a dense LM's parameters, so W4 on the MLPs cuts
+weight bytes — the decode-bandwidth bottleneck — by ~half end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_weight(w, *, group_size: int = 128, bits: int = 4):
+    """w (K, N) float -> {"qw": int32 (K/8, N), "scales", "zeros" (K/g, N)}.
+    3-D (layer-stacked) weights quantize per layer slice: (L, K/8, N).
+
+    Asymmetric per-group min/max quantization (AWQ storage layout)."""
+    if w.ndim == 3:  # scanned layer stack
+        parts = [quantize_weight(w[i], group_size=group_size, bits=bits)
+                 for i in range(w.shape[0])]
+        return {"qw": jnp.stack([p["qw"] for p in parts]),
+                "scales": jnp.stack([p["scales"] for p in parts]),
+                "zeros": jnp.stack([p["zeros"] for p in parts])}
+    K, N = w.shape
+    assert K % group_size == 0, (K, group_size)
+    levels = (1 << bits) - 1
+    wf = np.asarray(w, np.float32).reshape(K // group_size, group_size, N)
+    lo = wf.min(axis=1)                                   # (K/g, N)
+    hi = wf.max(axis=1)
+    scales = np.maximum((hi - lo) / levels, 1e-8)
+    zeros = np.round(-lo / scales)
+    q = np.clip(np.round(wf / scales[:, None, :]) + zeros[:, None, :], 0, levels)
+    q = q.reshape(K, N).astype(np.uint32)
+    # pack 8 nibbles per int32 along K (matches kernels.ref.awq_pack)
+    pack = 32 // bits
+    out = np.zeros((K // pack, N), dtype=np.uint32)
+    qr = q.reshape(K // pack, pack, N)
+    for i in range(pack):
+        out |= qr[:, i, :] << (bits * i)
+    # NOTE: no python-int metadata in the tree — quantized dicts ride
+    # through lax.scan as stacked leaves; group size is inferred from
+    # shapes (K = qw_rows*8; group = K / scales_rows), bits fixed at 4.
+    return {"qw": jnp.asarray(out.astype(np.int32)),
+            "scales": jnp.asarray(scales.astype(np.float32)),
+            "zeros": jnp.asarray(zeros.astype(np.float32))}
+
+
+def is_quantized(p) -> bool:
+    return isinstance(p, dict) and "qw" in p
+
+
+def quantize_mlp_tree(params, *, group_size: int = 128):
+    """Quantize every gated-MLP weight (w1/w3/w2) in a param tree whose
+    contraction dim divides the group size. Returns a new tree."""
+    def walk(node):
+        if isinstance(node, dict):
+            if {"w1", "w2", "w3"} <= set(node.keys()):
+                out = dict(node)
+                for k in ("w1", "w3", "w2"):
+                    w = node[k]
+                    if (hasattr(w, "shape") and w.ndim in (2, 3)
+                            and w.shape[-2] % group_size == 0):
+                        out[k] = quantize_weight(w, group_size=group_size)
+                return {k: (v if k in ("w1", "w2", "w3") else walk(v))
+                        for k, v in out.items()}
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def weight_bytes(params) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

@@ -1,0 +1,30 @@
+"""Token samplers: greedy / temperature / top-k, vocab-mask aware."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0    # 0 -> greedy
+    top_k: int = 0              # 0 -> full softmax
+    vocab_size: int = 0         # mask padded logits beyond this
+
+
+def sample(logits, rng, sc: SamplerConfig):
+    """logits (B, V) -> token ids (B,)."""
+    logits = logits.astype(jnp.float32)
+    if sc.vocab_size and sc.vocab_size < logits.shape[-1]:
+        mask = jnp.arange(logits.shape[-1]) < sc.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    if sc.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / sc.temperature
+    if sc.top_k:
+        kth = jax.lax.top_k(logits, sc.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1)

@@ -1,0 +1,148 @@
+"""Continuous batching scheduler.
+
+Fixed decode batch of B slots over one shared KV cache; new requests
+are prefillled at batch=1 and spliced into a free slot (per-leaf batch
+axis derived from the model's cache_specs), finished slots are freed
+immediately. Per-slot positions ride in cache["pos"] as a (B,) vector —
+the decode paths accept either a scalar or a vector.
+
+Straggler/fault hooks: a per-request deadline; requests that exceed it
+are cancelled and their slot reclaimed (the dual-channel relay reaps the
+channel on its own timer — see repro.core.relay).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt_ids: list
+    max_new_tokens: int = 32
+    on_token: Optional[Callable[[int, str], None]] = None
+    on_done: Optional[Callable[["Request"], None]] = None
+    deadline_s: float = 0.0          # 0 = none
+    submitted_at: float = field(default_factory=time.perf_counter)
+    output_ids: list = field(default_factory=list)
+    done: bool = False
+    cancelled: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, engine, *, slots: int = 4, max_seq: int | None = None):
+        self.engine = engine
+        self.model = engine.model
+        self.cfg = engine.cfg
+        self.B = slots
+        self.max_seq = max_seq or engine.max_seq
+        self.tokenizer: ByteTokenizer = engine.tokenizer
+
+        self.cache = self.model.init_cache(self.B, self.max_seq)
+        self.cache["pos"] = jnp.zeros((self.B,), jnp.int32)
+        self._batch_axes = self._derive_batch_axes()
+        self.active: list[Optional[Request]] = [None] * self.B
+        self.queue: list[Request] = []
+        self.tok = jnp.zeros((self.B, 1), jnp.int32)
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill)
+
+    # ------------------------------------------------------------ internals
+    def _derive_batch_axes(self):
+        specs = self.model.cache_specs()
+
+        def axis(spec):
+            if not isinstance(spec, tuple):
+                return -1
+            return spec.index("batch") if "batch" in spec else -1
+
+        # -1 sentinel (None leaves vanish from pytrees and break alignment)
+        return jax.tree.map(axis, specs,
+                            is_leaf=lambda s: isinstance(s, tuple) and
+                            all(isinstance(e, (str, type(None))) for e in s))
+
+    def _splice(self, slot: int, one_cache):
+        """Insert a batch=1 cache into slot ``slot`` of the shared cache."""
+        flat_axes = jax.tree.leaves(self._batch_axes)
+        buf_leaves, treedef = jax.tree.flatten(self.cache)
+        new_leaves = jax.tree.leaves(one_cache)
+        assert len(buf_leaves) == len(new_leaves) == len(flat_axes)
+        out = [jax.lax.dynamic_update_slice_in_dim(b, n.astype(b.dtype), slot, axis=a)
+               if a >= 0 else b
+               for b, n, a in zip(buf_leaves, new_leaves, flat_axes)]
+        self.cache = treedef.unflatten(out)
+        # per-slot position
+        pos = np.array(self.cache["pos"])
+        pos[slot] = int(np.asarray(one_cache["pos"]))
+        self.cache["pos"] = jnp.asarray(pos)
+
+    # ------------------------------------------------------------ API
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                ids = req.prompt_ids[: self.max_seq - req.max_new_tokens - 1]
+                b = self.engine._bucket(len(ids))
+                ids = [self.tokenizer.pad_id] * (b - len(ids)) + ids
+                one = self.model.init_cache(1, self.max_seq)
+                logits, one = self._prefill(self.engine.params,
+                                            jnp.asarray([ids], jnp.int32), one)
+                self._splice(slot, one)
+                t = int(jnp.argmax(logits, -1)[0])
+                req.output_ids.append(t)
+                if req.on_token:
+                    req.on_token(t, self.tokenizer.decode_token(t))
+                self.tok = self.tok.at[slot, 0].set(t)
+                self.active[slot] = req
+
+    def _finish(self, slot: int, cancelled=False):
+        req = self.active[slot]
+        if req is None:
+            return
+        req.done, req.cancelled = True, cancelled
+        if req.on_done:
+            req.on_done(req)
+        self.active[slot] = None
+
+    def step(self) -> int:
+        """One scheduler tick: admit, decode, emit, reap. Returns #active."""
+        self._admit()
+        if not any(self.active):
+            return 0
+        logits, self.cache = self._decode(self.engine.params, self.tok, self.cache)
+        self.engine.rng, k = jax.random.split(self.engine.rng)
+        nxt = sample(logits, k, self.engine.sampler)
+        self.tok = nxt[:, None]
+        now = time.perf_counter()
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            t = int(nxt[slot])
+            req.output_ids.append(t)
+            if req.on_token:
+                req.on_token(t, self.tokenizer.decode_token(t))
+            over_deadline = req.deadline_s and (now - req.submitted_at) > req.deadline_s
+            if (len(req.output_ids) >= req.max_new_tokens
+                    or t == self.tokenizer.eos_id or over_deadline):
+                self._finish(slot, cancelled=bool(over_deadline))
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_steps: int = 10000):
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

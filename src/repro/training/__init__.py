@@ -1,0 +1,7 @@
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+from repro.training.train import make_train_step, TrainState
+from repro.training.data import SyntheticLMData
+from repro.training.checkpoint import CheckpointManager
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "make_train_step",
+           "TrainState", "SyntheticLMData", "CheckpointManager"]

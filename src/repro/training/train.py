@@ -1,0 +1,90 @@
+"""Train-step factory: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (jax.lax.scan over microbatches, compute/HBM
+trade for the big assigned configs)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state), None
+
+
+def make_train_step(model, oc: AdamWConfig, *, accum_steps: int = 1,
+                    cast_params: str | None = None, grad_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch: {"tokens": (B, T) int32, optional "extra": {...}}.
+    With accum_steps > 1, batch is split along dim 0 and grads averaged
+    via a scan (microbatching).
+
+    cast_params: cast the fp32 masters to this dtype ONCE at the top of
+    the loss — under FSDP this moves the weight all-gathers from fp32 to
+    bf16 (2x collective traffic; see EXPERIMENTS.md §Perf). Gradients
+    still accumulate into fp32 masters through the cast.
+    """
+
+    def loss_fn(params, batch):
+        if cast_params is not None:
+            dt = jnp.dtype(cast_params)
+            params = jax.tree.map(
+                lambda p: p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+                params)
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(tree):
+        # pin gradients (and the accumulator carry) to the FSDP layout so
+        # GSPMD emits reduce-scatter instead of a full-gradient all-reduce
+        # (§Perf iteration B3 in EXPERIMENTS.md)
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain(grads)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc = carry
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, constrain(g))
+                return constrain(acc), (l, m)
+
+            zero = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, (losses, ms) = jax.lax.scan(body, zero, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        new_params, new_opt, stats = adamw_update(grads, opt_state, params, oc)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(model, rng):
+    params = model.init(rng)
+    return params, adamw_init(params)

@@ -1,0 +1,71 @@
+"""Complexity judge + tier router (paper §2.2)."""
+
+import pytest
+
+from repro.core.judge import (CachedJudge, Complexity, FeatureJudge, KeywordJudge,
+                              extract_features, N_FEATURES)
+from repro.core.router import FALLBACK_CHAINS, TierRouter
+
+
+class FakeBackend:
+    def __init__(self, healthy=True):
+        self.healthy = healthy
+
+    def health_check(self):
+        return self.healthy
+
+
+def test_keyword_judge_basic_classes():
+    j = KeywordJudge()
+    low, _ = j.judge("What is the capital of France?")
+    hi, _ = j.judge("Propose a novel research direction for open problem X, "
+                    "prove convergence and analyze trade-offs in depth with a detailed "
+                    "step-by-step derivation of the eigenvalue bounds " + "x " * 50)
+    assert low == Complexity.LOW
+    assert hi == Complexity.HIGH
+
+
+def test_feature_extraction_shape():
+    f = extract_features("why is the sky blue?")
+    assert f.shape == (N_FEATURES,)
+
+
+def test_feature_judge_trains_and_separates():
+    texts = (["what is X?"] * 20
+             + ["explain and compare the trade-offs of algorithm design choices"] * 20
+             + ["prove this novel theorem about frontier research open problem"] * 20)
+    labels = [0] * 20 + [1] * 20 + [2] * 20
+    judge, loss = FeatureJudge.train(texts, labels, steps=200)
+    assert loss < 1.0
+    assert judge.judge("what is Y?")[0] == Complexity.LOW
+    assert judge.judge("prove this novel theorem about frontier research open problem")[0] == Complexity.HIGH
+
+
+def test_cached_judge_hits():
+    j = CachedJudge(KeywordJudge())
+    j.judge("what is 2+2?")
+    j.judge("what is 2+2?")
+    assert j.hits == 1 and j.misses == 1
+
+
+def test_fallback_chains_asymmetric():
+    assert FALLBACK_CHAINS[Complexity.MEDIUM][0] == "hpc"
+    assert FALLBACK_CHAINS[Complexity.MEDIUM] == ("hpc", "cloud", "local")
+    assert FALLBACK_CHAINS[Complexity.HIGH] == ("cloud", "hpc", "local")
+    assert FALLBACK_CHAINS[Complexity.LOW][0] == "local"
+
+
+def test_router_health_skip():
+    backends = {"local": FakeBackend(), "hpc": FakeBackend(healthy=False),
+                "cloud": FakeBackend()}
+    r = TierRouter(backends, KeywordJudge())
+    d = r.route("explain and compare the trade-offs of consensus algorithms")
+    assert "hpc" not in d.chain
+    assert "hpc" in d.health_skipped
+
+
+def test_router_override():
+    backends = {"local": FakeBackend(), "hpc": FakeBackend(), "cloud": FakeBackend()}
+    r = TierRouter(backends, KeywordJudge())
+    d = r.route("anything", override_tier="cloud")
+    assert d.chain[0] == "cloud" and d.overridden

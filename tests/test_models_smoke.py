@@ -1,0 +1,119 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the
+same family, one forward + one train step on CPU, asserting output
+shapes and no NaNs; plus prefill/decode vs full-forward consistency in
+fp32 (the cache math must be exact)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config, shapes_for
+from repro.models import build_model
+from repro.training import AdamWConfig, make_train_step
+from repro.training.train import init_train_state
+
+RNG = jax.random.PRNGKey(0)
+
+
+def extra_for(cfg, B, rng):
+    if cfg.is_encoder_decoder:
+        return {"frames": jax.random.normal(rng, (B, cfg.encoder_seq_len, cfg.d_model)) * 0.1}
+    if cfg.family == "vlm":
+        return {"vision": jax.random.normal(rng, (B, cfg.n_image_tokens, cfg.vision_dim)) * 0.1}
+    return None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, T = 2, 16
+    tokens = jax.random.randint(RNG, (B, T), 0, cfg.vocab_size)
+    logits = model.forward(params, tokens, extra_for(cfg, B, RNG))
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params, opt = init_train_state(model, RNG)
+    step = make_train_step(model, AdamWConfig(lr=1e-3, warmup_steps=1, decay_steps=10))
+    B, T = 2, 16
+    batch = {"tokens": jax.random.randint(RNG, (B, T), 0, cfg.vocab_size)}
+    ex = extra_for(cfg, B, RNG)
+    if ex is not None:
+        batch["extra"] = ex
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_opt["step"]) == 1
+    # parameters actually moved
+    moved = any(float(jnp.abs(a - b).max()) > 0
+                for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward_fp32(arch):
+    cfg = get_smoke_config(arch).replace(remat=False, compute_dtype="float32")
+    if cfg.n_experts:  # no-drop capacity so routing is path-independent
+        nd = cfg.n_experts / cfg.top_k
+        cfg = cfg.replace(capacity_factor=nd, eval_capacity_factor=nd)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, T = 2, 12
+    tokens = jax.random.randint(RNG, (B, T + 3), 0, cfg.vocab_size)
+    ex = extra_for(cfg, B, RNG)
+    full = model.forward(params, tokens, ex)
+    cache = model.init_cache(B, 32)
+    last, cache = model.prefill(params, tokens[:, :T], cache, ex)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, T - 1]),
+                               rtol=1e-4, atol=1e-4)
+    for t in range(T, T + 3):
+        lg, cache = model.decode_step(params, tokens[:, t:t + 1], cache, ex)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs encode the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+                          d_ff=14336, vocab_size=32000, ssm_state=64),
+        "minitron-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+                            d_ff=16384, vocab_size=256000),
+        "deepseek-67b": dict(n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8,
+                             d_ff=22016, vocab_size=102400),
+        "gemma-7b": dict(n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16,
+                         d_ff=24576, vocab_size=256000, head_dim=256),
+        "granite-20b": dict(n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1,
+                            d_ff=24576, vocab_size=49152),
+        "whisper-medium": dict(n_layers=24, n_encoder_layers=24, d_model=1024,
+                               n_heads=16, d_ff=4096, vocab_size=51865),
+        "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16,
+                                     moe_d_ff=1408, vocab_size=102400,
+                                     n_experts=64, top_k=6, kv_lora_rank=512),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+                            d_ff=32768, vocab_size=131072, n_experts=8, top_k=2),
+        "llama-3.2-vision-11b": dict(n_layers=40, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, d_ff=14336, vocab_size=128256),
+        "xlstm-125m": dict(n_layers=12, d_model=768, n_heads=4, vocab_size=50304),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_shape_cells_cover_assignment():
+    total = sum(len(shapes_for(a)) for a in ARCHS)
+    # 8 full-attention archs x 3 + 2 sub-quadratic archs x 4 = 32 runnable
+    assert total == 32
+    assert {c.name for c in shapes_for("zamba2-7b")} == {
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert {c.name for c in shapes_for("gemma-7b")} == {
+        "train_4k", "prefill_32k", "decode_32k"}

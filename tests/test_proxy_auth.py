@@ -1,0 +1,71 @@
+"""HPC-as-API proxy: dual auth, rate limiting, validation, audit
+hygiene (paper §4, §5)."""
+
+import pytest
+
+from repro.core.auth import (ApiKeyStore, AuthFailure, DualAuthenticator,
+                             GlobusAuthService, SlidingWindowRateLimiter)
+from repro.core.proxy import ValidationError, validate_chat_request
+
+
+def make_auth(domains=("uic.edu",)):
+    return GlobusAuthService(), ApiKeyStore()
+
+
+def test_globus_issue_verify_revoke():
+    g = GlobusAuthService()
+    tok = g.issue_token("alice@uic.edu")
+    assert g.verify(tok) == "alice@uic.edu"
+    g.revoke(tok)
+    with pytest.raises(AuthFailure):
+        g.verify(tok)
+
+
+def test_dual_auth_order_and_domain():
+    g, keys = make_auth()
+    auth = DualAuthenticator(g, keys, allowed_domains=("uic.edu",))
+    tok = g.issue_token("bob@uic.edu")
+    ident = auth.authenticate(tok)
+    assert ident.mode == "globus" and ident.subject == "bob@uic.edu"
+    # wrong domain rejected even with a valid token
+    tok2 = g.issue_token("eve@evil.com")
+    with pytest.raises(AuthFailure, match="domain"):
+        auth.authenticate(tok2)
+    # api key fallback
+    key = keys.issue("svc-1")
+    ident2 = auth.authenticate(key)
+    assert ident2.mode == "api_key" and ident2.subject == "svc-1"
+    with pytest.raises(AuthFailure):
+        auth.authenticate("nonsense")
+    with pytest.raises(AuthFailure):
+        auth.authenticate(None)
+
+
+def test_api_keys_hashed_at_rest():
+    g, keys = make_auth()
+    key = keys.issue("svc-2")
+    assert key not in str(keys._keys)
+
+
+def test_rate_limiter_sliding_window():
+    rl = SlidingWindowRateLimiter(max_requests=3, window_s=10.0)
+    now = 100.0
+    assert all(rl.allow("a", now=now + i) for i in range(3))
+    assert not rl.allow("a", now=now + 3)
+    assert rl.allow("b", now=now + 3)          # independent caller
+    assert rl.allow("a", now=now + 11)          # window slid
+
+
+def test_request_validation():
+    validate_chat_request({"messages": [{"role": "user", "content": "hi"}]})
+    with pytest.raises(ValidationError):
+        validate_chat_request({"messages": []})
+    with pytest.raises(ValidationError):
+        validate_chat_request({"messages": [{"role": "hacker", "content": "x"}]})
+    with pytest.raises(ValidationError):
+        validate_chat_request({"messages": [{"role": "user", "content": 42}]})
+    with pytest.raises(ValidationError):
+        validate_chat_request({"messages": [{"role": "user", "content": "x"}],
+                               "max_tokens": 0})
+    with pytest.raises(ValidationError):
+        validate_chat_request({"messages": [{"role": "user", "content": "y" * 100000}]})

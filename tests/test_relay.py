@@ -1,0 +1,140 @@
+"""Relay data-plane protocol semantics (paper §3.1–3.2, §5)."""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core.crypto import AESGCM, new_key
+from repro.core.data_plane import consume_tokens, produce_tokens
+from repro.core.relay import AuthError, Relay, RelayError, new_channel_id
+
+SECRET = "test-relay-secret-123"
+
+
+def make_relay(**kw):
+    return Relay(SECRET, **kw)
+
+
+def test_buffer_and_replay_when_consumer_late():
+    """Producer first, consumer attaches late: every token replayed in order."""
+    relay = make_relay()
+    ch = new_channel_id()
+    prod = relay.connect_producer(ch).authenticate(SECRET)
+    for i in range(50):
+        prod.send({"seq": i})
+    prod.close()
+    cons = relay.connect_consumer(ch).authenticate(SECRET)
+    got = [m["seq"] for m in cons]
+    assert got == list(range(50))
+
+
+def test_streaming_concurrent():
+    relay = make_relay()
+    ch = new_channel_id()
+    got = []
+
+    def consume():
+        cons = relay.connect_consumer(ch).authenticate(SECRET)
+        for m in cons:
+            got.append(m["seq"])
+
+    t = threading.Thread(target=consume)
+    t.start()
+    prod = relay.connect_producer(ch).authenticate(SECRET)
+    for i in range(20):
+        prod.send({"seq": i})
+    prod.close()
+    t.join(timeout=5)
+    assert got == list(range(20))
+
+
+def test_bad_secret_rejected():
+    relay = make_relay()
+    ch = new_channel_id()
+    with pytest.raises(AuthError):
+        relay.connect_producer(ch).authenticate("wrong")
+    conn = relay.connect_consumer(ch)
+    with pytest.raises(AuthError):
+        conn.recv(timeout=0.1)  # unauthenticated use
+
+
+def test_secret_never_in_access_log():
+    """The paper's ?secret= pitfall: post-handshake auth keeps the secret
+    out of every logged record."""
+    relay = make_relay()
+    ch = new_channel_id()
+    prod = relay.connect_producer(ch).authenticate(SECRET)
+    prod.send({"seq": 0})
+    prod.close()
+    cons = relay.connect_consumer(ch).authenticate(SECRET)
+    list(cons)
+    log_text = json.dumps(relay.access_log)
+    assert SECRET not in log_text
+    assert "auth_ok" in log_text
+
+
+def test_backpressure_on_full_buffer():
+    relay = make_relay(buffer_size=10, send_timeout_s=0.2)
+    ch = new_channel_id()
+    prod = relay.connect_producer(ch).authenticate(SECRET)
+    for i in range(10):
+        prod.send({"seq": i})
+    with pytest.raises(RelayError):
+        prod.send({"seq": 10})
+
+
+def test_channel_reaped_when_one_side_missing():
+    relay = make_relay(reap_timeout_s=0.05)
+    ch = new_channel_id()
+    relay.connect_producer(ch).authenticate(SECRET)
+    assert relay.n_channels() == 1
+    time.sleep(0.1)
+    relay._get_or_create(new_channel_id())  # triggers reap sweep
+    assert relay.stats["channels_reaped"] >= 1
+
+
+def test_channel_removed_after_completion():
+    relay = make_relay()
+    ch = new_channel_id()
+    prod = relay.connect_producer(ch).authenticate(SECRET)
+    cons = relay.connect_consumer(ch).authenticate(SECRET)
+    prod.send({"seq": 0})
+    prod.close()
+    list(cons)
+    cons.close()
+    assert relay.n_channels() == 0
+
+
+def test_e2e_encryption_relay_sees_only_ciphertext():
+    """Compromised-relay threat model: payloads opaque to the relay."""
+    relay = make_relay()
+    ch = new_channel_id()
+    key = new_key()
+    tokens = [(1, "top"), (2, "secret"), (3, "data")]
+
+    t = threading.Thread(target=produce_tokens,
+                         args=(relay, ch, SECRET, iter(tokens), key))
+    t.start()
+    out = list(consume_tokens(relay, ch, SECRET, key))
+    t.join()
+    assert [p["text"] for p in out] == ["top", "secret", "data"]
+    # inspect what the relay buffered: it must never have seen plaintext
+    # (messages already consumed; check stats + log for leakage instead)
+    assert "secret" not in json.dumps(relay.access_log)
+
+
+def test_out_of_order_detection():
+    relay = make_relay()
+    ch = new_channel_id()
+    prod = relay.connect_producer(ch).authenticate(SECRET)
+    prod.send({"t": "token", "seq": 1, "text": "x"})  # skipped seq 0
+    prod.close()
+    with pytest.raises(RuntimeError, match="out-of-order"):
+        list(consume_tokens(relay, ch, SECRET))
+
+
+def test_channel_ids_unique():
+    ids = {new_channel_id() for _ in range(1000)}
+    assert len(ids) == 1000

@@ -1,0 +1,66 @@
+"""Tier-aware summarization (paper §6 + Table 3 mechanics)."""
+
+from repro.core.summarizer import (DEFAULT_POLICIES, SummarizerPolicy,
+                                   TierAwareSummarizer, conversation_tokens,
+                                   count_tokens)
+
+
+def turns(n, tokens_per_turn=1050):
+    text = "x" * (tokens_per_turn - 1)
+    msgs = []
+    for i in range(n):
+        msgs.append({"role": "user", "content": text})
+        msgs.append({"role": "assistant", "content": text})
+    return msgs
+
+
+def test_default_policies_match_paper():
+    assert DEFAULT_POLICIES["local"].context_window == 32_768
+    assert DEFAULT_POLICIES["local"].summary_budget == 2048
+    assert DEFAULT_POLICIES["local"].keep_turn_pairs == 3
+    assert DEFAULT_POLICIES["hpc"].summary_budget == 4096
+    assert DEFAULT_POLICIES["hpc"].keep_turn_pairs == 6
+    assert not DEFAULT_POLICIES["cloud"].enabled
+
+
+def test_trigger_at_80_percent():
+    s = TierAwareSummarizer()
+    small = turns(5)
+    assert not s.needed(small, "local")
+    big = turns(14)  # ~29.4K tokens > 0.8*32K
+    assert s.needed(big, "local")
+
+
+def test_summary_respects_budget_and_keeps_recent():
+    s = TierAwareSummarizer()
+    msgs = turns(16)
+    out, did = s.apply(msgs, "local")
+    assert did
+    # last 3 turn pairs verbatim
+    assert out[-6:] == msgs[-6:]
+    # compressed enough to fit
+    assert conversation_tokens(out) < DEFAULT_POLICIES["local"].context_window
+    summary = out[0]
+    assert summary["role"] == "system"
+    assert count_tokens(summary["content"]) <= DEFAULT_POLICIES["local"].summary_budget + 64
+
+
+def test_cloud_tier_disabled():
+    s = TierAwareSummarizer()
+    msgs = turns(16)
+    out, did = s.apply(msgs, "cloud")
+    assert not did and out == msgs
+
+
+def test_table3_probe_stays_local():
+    """Paper Table 3: without summarization the probe upgrades at ~turn 30;
+    with it the probe stays within the local window through turn 40."""
+    s = TierAwareSummarizer()
+    for turn in (10, 20, 30, 35, 40):
+        msgs = turns(turn)
+        probe = msgs + [{"role": "user", "content": "What is 2+2?"}]
+        raw_fits = conversation_tokens(probe) <= 32_768
+        summarized, _ = s.apply(probe, "local")
+        assert conversation_tokens(summarized) <= 32_768, f"turn {turn}"
+        if turn >= 30:
+            assert not raw_fits, "raw context should exceed 32K from turn 30"

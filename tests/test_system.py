@@ -1,0 +1,116 @@
+"""End-to-end behaviour of the full STREAM system: dual-channel
+streaming vs batch fallback, routed queries, proxy, fallback chains,
+secret hygiene, usage tracking. One shared system fixture (model
+compilation is the expensive part on one core)."""
+
+import json
+
+import pytest
+
+from repro.core import build_system
+from repro.core.sse import parse_sse
+
+
+@pytest.fixture(scope="module")
+def system():
+    return build_system(dispatch_latency_s=0.02, max_seq=160, cloud_ttft_s=0.01)
+
+
+def test_low_query_routes_local(system):
+    h = system.handler.handle("What is the capital of France?", max_tokens=6)
+    assert h.tier_used == "local"
+    assert h.result.streamed
+    assert h.result.cost_usd == 0.0
+
+
+def test_medium_routes_hpc_via_dual_channel(system):
+    toks = []
+    h = system.handler.handle(
+        "Explain and compare the trade-offs of two consensus algorithms.",
+        max_tokens=8, on_token=lambda t, s: toks.append(t))
+    assert h.tier_used == "hpc"
+    assert h.result.streamed
+    assert len(toks) == 8
+
+
+def test_relay_ttft_beats_batch(system):
+    hpc = system.backends["hpc"]
+    msgs = [{"role": "user", "content": "warmup then measure"}]
+    hpc.stream(msgs, max_tokens=32)                      # warm
+    hpc.relay_enabled = False
+    hpc.stream(msgs, max_tokens=32)
+    hpc.relay_enabled = True
+    r_rel = hpc.stream(msgs, max_tokens=32)
+    hpc.relay_enabled = False
+    r_bat = hpc.stream(msgs, max_tokens=32)
+    hpc.relay_enabled = True
+    assert r_rel.streamed and not r_bat.streamed
+    assert r_bat.ttft_s == pytest.approx(r_bat.total_s)   # batch: TTFT == total
+    assert r_rel.ttft_s < r_bat.ttft_s                    # the paper's headline
+    assert r_rel.n_completion_tokens == 32
+
+
+def test_no_secret_leaves_control_or_data_plane(system):
+    hpc = system.backends["hpc"]
+    hpc.stream([{"role": "user", "content": "leak check"}], max_tokens=4)
+    for rec in system.endpoint.task_records():
+        blob = json.dumps(rec.kwargs, default=str)
+        assert system.backends["hpc"]._secret not in blob
+        assert "RELAY_ENCRYPTION_KEY" not in blob
+    assert system.backends["hpc"]._secret not in json.dumps(system.relay.access_log)
+
+
+def test_proxy_stream_openai_format(system):
+    tok = system.globus.issue_token("alice@uic.edu")
+    resp = system.proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "hi"}], "max_tokens": 5,
+         "stream": True}, bearer=tok)
+    assert resp.status == 200
+    chunks = parse_sse("".join(resp.stream))
+    assert chunks[0]["object"] == "chat.completion.chunk"
+    assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
+    assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
+
+
+def test_proxy_rejects_before_cluster_work(system):
+    n_tasks = len(system.endpoint.task_records())
+    resp = system.proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "x"}]}, bearer="bad-token")
+    assert resp.status == 401
+    assert len(system.endpoint.task_records()) == n_tasks  # nothing reached HPC
+
+
+def test_proxy_api_key_mode(system):
+    key = system.api_keys.issue("external-svc")
+    resp = system.proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "hello"}], "max_tokens": 4,
+         "stream": False}, bearer=key)
+    assert resp.status == 200
+    assert resp.body["usage"]["completion_tokens"] == 4
+    mode = [e for e in system.proxy.audit_log if e["caller"] == "external-svc"]
+    assert mode and mode[-1]["auth_mode"] == "api_key"
+
+
+def test_audit_log_has_no_content(system):
+    tok = system.globus.issue_token("carol@uic.edu")
+    secret_text = "EXTREMELY_PRIVATE_QUERY_CONTENT"
+    system.proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": secret_text}], "max_tokens": 4,
+         "stream": False}, bearer=tok)
+    assert secret_text not in json.dumps(system.proxy.audit_log)
+    assert secret_text not in json.dumps(
+        [r.__dict__ for r in system.tracker.records()], default=str)
+
+
+def test_fallback_when_hpc_down():
+    sys2 = build_system(hpc_fail=True, dispatch_latency_s=0.0, max_seq=160)
+    h = sys2.handler.handle(
+        "Explain and compare the trade-offs of two optimizers.", max_tokens=4)
+    assert h.tier_used != "hpc"
+
+
+def test_usage_tracking_and_cost(system):
+    system.handler.handle("What is the capital of Spain?", max_tokens=4)
+    summary = system.tracker.summary()
+    assert summary["n_requests"] >= 1
+    assert "local" in summary["by_tier"]
