@@ -60,5 +60,83 @@ def run(n_requests: int = 12, tokens: int = 24, slot_counts=(1, 2, 4), quiet=Fal
     return rows
 
 
+def run_interference(slots: int = 4, bg_tokens: int = 128, n_admissions: int = 6,
+                     prompt_chars: int = 60, adm_tokens: int = 4, repeats: int = 3,
+                     quiet=False, **batcher_kw):
+    """Admission/decode interference: aggregate decode tok/s of long-running
+    background requests (slots-1 of them) while a stream of long-prompt
+    admissions churns through the remaining slot. This is the tail-TTFT
+    failure mode Chat AI (arXiv:2407.00110) attributes to admission
+    stalls; chunked prefill + the fused tick are the fix. Reports
+    background tok/s with and without the admission stream (medians over
+    ``repeats`` interleaved trials; the window runs from the first
+    background token to the last background completion)."""
+    import statistics
+
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=384)
+    engine = ServingEngine(cfg, max_seq=256)
+    engine.warmup()
+    prompt = "z" * prompt_chars
+
+    def one_run(cb, with_admissions: bool) -> float:
+        state = {"bg_tokens": 0, "bg_live": slots - 1,
+                 "bg_start": 0.0, "bg_done_at": 0.0}
+
+        def bg_tok(_t, _s):
+            if state["bg_tokens"] == 0:
+                state["bg_start"] = time.perf_counter()
+            state["bg_tokens"] += 1
+
+        def bg_done(_r):
+            state["bg_live"] -= 1
+            if state["bg_live"] == 0:
+                state["bg_done_at"] = time.perf_counter()
+
+        for i in range(slots - 1):
+            cb.submit(Request(rid=f"bg{i}",
+                              prompt_ids=engine.tokenizer.encode(f"background {i}"),
+                              max_new_tokens=bg_tokens,
+                              on_token=bg_tok, on_done=bg_done))
+        if with_admissions:
+            for i in range(n_admissions):
+                cb.submit(Request(rid=f"adm{i}",
+                                  prompt_ids=engine.tokenizer.encode(prompt),
+                                  max_new_tokens=adm_tokens))
+        cb.run_until_drained()
+        wall = (state["bg_done_at"] or time.perf_counter()) - state["bg_start"]
+        return state["bg_tokens"] / max(wall, 1e-9)
+
+    # one batcher reused across trials so jit compilation (fused tick +
+    # both prefill shapes) is paid once, outside every measured window
+    cb = ContinuousBatcher(engine, slots=slots, max_seq=256, **batcher_kw)
+    cb.submit(Request(rid="warm0", prompt_ids=engine.tokenizer.encode("bg"),
+                      max_new_tokens=2))
+    cb.submit(Request(rid="warm1", prompt_ids=engine.tokenizer.encode(prompt),
+                      max_new_tokens=2))
+    cb.run_until_drained()
+
+    quiet_v, loaded_v = [], []
+    for _ in range(repeats):             # interleave to decorrelate drift
+        quiet_v.append(one_run(cb, False))
+        loaded_v.append(one_run(cb, True))
+    quiet_tok_s = statistics.median(quiet_v)
+    loaded_tok_s = statistics.median(loaded_v)
+    rows = {
+        "bg_tok_s_quiet": quiet_tok_s,
+        "bg_tok_s_under_admissions": loaded_tok_s,
+        "retention": loaded_tok_s / quiet_tok_s,
+    }
+    if not quiet:
+        print(f"\n=== admission interference ({slots} slots, {slots-1} background "
+              f"x {bg_tokens} tokens, {n_admissions} admissions of "
+              f"{prompt_chars}-char prompts) ===")
+        print(f"background decode tok/s, quiet:            {quiet_tok_s:8.1f}")
+        print(f"background decode tok/s, under admissions: {loaded_tok_s:8.1f}")
+        print(f"retention: {rows['retention']*100:.0f}% "
+              "(100% = admissions cost the decode batch nothing)")
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_interference()

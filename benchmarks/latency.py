@@ -72,5 +72,61 @@ def run(runs: int = 25, max_tokens: int = 128, hpc_tokens: int = 512, quiet=Fals
     return rows
 
 
+def run_ttft_under_load(slots: int = 4, bg_tokens: int = 96, n_admissions: int = 6,
+                        prompt_chars: int = 60, max_tokens: int = 8, quiet=False,
+                        **batcher_kw):
+    """TTFT seen by short requests admitted while ``slots-1`` long decodes
+    already occupy the batch — the paper's stated limitation ("shared
+    deployments with concurrent users may see higher TTFT due to worker
+    queuing", §Limitations), measured on our continuous batcher. Chunked
+    prefill bounds how long any admission can stall the tick, which is
+    what keeps this number close to the unloaded TTFT."""
+    from repro.configs import get_smoke_config
+    from repro.serving import ContinuousBatcher, Request, ServingEngine
+
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=384)
+    engine = ServingEngine(cfg, max_seq=256)
+    engine.warmup()
+    prompt = "z" * prompt_chars
+
+    solo = statistics.median(
+        engine.generate(prompt, max_new_tokens=2).ttft_s for _ in range(5))
+
+    cb = ContinuousBatcher(engine, slots=slots, max_seq=256, **batcher_kw)
+    cb.submit(Request(rid="warm0", prompt_ids=engine.tokenizer.encode("bg"),
+                      max_new_tokens=2))
+    cb.submit(Request(rid="warm1", prompt_ids=engine.tokenizer.encode(prompt),
+                      max_new_tokens=2))
+    cb.run_until_drained()
+
+    for i in range(slots - 1):
+        cb.submit(Request(rid=f"bg{i}",
+                          prompt_ids=engine.tokenizer.encode(f"background {i}"),
+                          max_new_tokens=bg_tokens))
+    ttfts: dict[str, float] = {}
+    for i in range(n_admissions):
+        rid = f"adm{i}"
+        req = Request(rid=rid, prompt_ids=engine.tokenizer.encode(prompt),
+                      max_new_tokens=max_tokens)
+        req.on_token = (lambda r: lambda t, s: ttfts.setdefault(
+            r.rid, time.perf_counter() - r.submitted_at))(req)
+        cb.submit(req)
+    cb.run_until_drained()
+
+    vals = sorted(ttfts.values())
+    p95_i = min(len(vals) - 1, max(-(-95 * len(vals) // 100) - 1, 0))  # nearest rank
+    rows = {"ttft_solo_s": solo,
+            "ttft_under_load_p50": vals[len(vals) // 2],
+            "ttft_under_load_p95": vals[p95_i]}
+    if not quiet:
+        print(f"\n=== TTFT under concurrent load ({slots - 1} background decodes, "
+              f"{n_admissions} admissions) ===")
+        print(f"solo TTFT:          {solo:7.3f}s")
+        print(f"under-load p50:     {rows['ttft_under_load_p50']:7.3f}s "
+              f"(p95 {rows['ttft_under_load_p95']:.3f}s; includes slot queueing)")
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_ttft_under_load()

@@ -41,6 +41,17 @@ def main() -> None:
     csv_rows.append(("batching.best_tok_s", f"{r_bt[best_slots]['agg_tok_s']:.0f}",
                      f"slots={best_slots}"))
 
+    r_int = batch_throughput.run_interference(n_admissions=4 if small else 6)
+    csv_rows.append(("interference.retention",
+                     f"{r_int['retention']*100:.0f}%",
+                     f"bg tok/s {r_int['bg_tok_s_quiet']:.1f} -> "
+                     f"{r_int['bg_tok_s_under_admissions']:.1f} under admissions"))
+
+    r_tl = latency.run_ttft_under_load(n_admissions=4 if small else 6)
+    csv_rows.append(("serving.ttft_under_load_p50",
+                     f"{r_tl['ttft_under_load_p50']:.3f}",
+                     f"solo={r_tl['ttft_solo_s']:.3f}s"))
+
     from benchmarks import roofline
     r4 = roofline.run()
     if r4:

@@ -55,6 +55,19 @@ def flash_attention(q, k, v, *, causal=True, scale=None, logit_soft_cap=0.0,
                               interpret=interpret, block_q=block_q, block_k=block_k)
 
 
+def chunk_attention(q, k, v, *, q_offset, kv_len, scale=None, logit_soft_cap=0.0,
+                    impl="ref", interpret=False):
+    """Chunked-prefill attention: q (B,Hq,Sq,D) is a prompt chunk whose
+    first query sits at absolute position ``q_offset``; k,v are the
+    full-size cache buffers with ``kv_len`` valid positions (the chunk's
+    own K/V already written in). Causal across the chunk, full across
+    the cached prefix. The Pallas flash kernel has no offset/len masking
+    yet, so both impls lower to the reference path."""
+    del impl, interpret
+    return _ref.mha(q, k, v, causal=True, kv_len=kv_len, q_offset=q_offset,
+                    scale=scale, logit_soft_cap=logit_soft_cap)
+
+
 def decode_attention(q, k, v, *, kv_len, scale=None, logit_soft_cap=0.0,
                      impl="ref", interpret=False, block_k=256):
     """Decode attention: q (B,Hq,1,D) vs cache k,v (B,Hkv,S,D), valid < kv_len."""

@@ -6,6 +6,9 @@ Protocol (duck-typed; see lm.TransformerLM for the reference):
   loss(params, batch) -> (scalar, metrics)
   init_cache(batch, max_seq) / cache_specs()
   prefill(params, tokens, cache, extra=None) -> (last_logits, cache)
+  prefill_chunk(params, tokens, cache, extra=None) -> (last_logits, cache)
+      continuation prefill: starts at cache["pos"], attends against the
+      already-cached prefix (chunked admissions; see docs/serving.md)
   decode_step(params, token, cache, extra=None) -> (logits, cache)
 """
 

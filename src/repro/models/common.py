@@ -204,3 +204,43 @@ def count_params(defs) -> int:
 
 def cast_tree(params, dtype):
     return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+# ---------------------------------------------------------------------------
+# cache-layout introspection (the cache_specs() contract)
+# ---------------------------------------------------------------------------
+#
+# Every model exposes cache_specs(): a pytree mirroring init_cache() whose
+# leaves are tuples of logical axis names (or None). Two names are load-
+# bearing for the serving layer:
+#
+#   "batch"   — the decode-slot axis. The continuous batcher splices a
+#               batch=1 prefilled cache into slot ``s`` along this axis.
+#   "kv_seq"  — a growing sequence axis. Splices only need to copy the
+#               *used* prefix (rounded up to a page) along it; leaves
+#               without it (SSM/xLSTM recurrent states, cross K/V) are
+#               copied whole per slot.
+#
+# The "pos" leaf has spec () and is managed by the caller (scalar for
+# plain generation, a (B,) per-slot vector inside the batcher).
+
+
+def _is_spec(s):
+    return isinstance(s, tuple) and all(isinstance(e, (str, type(None))) for e in s)
+
+
+def cache_axes(specs):
+    """cache_specs() tree -> (batch_axes, seq_axes): same-structure trees of
+    axis indices, -1 where the leaf lacks the axis (a -1 sentinel rather
+    than None so the leaves survive pytree flattening)."""
+
+    def axis(name):
+        def one(spec):
+            if not _is_spec(spec):
+                return -1
+            return spec.index(name) if name in spec else -1
+        return one
+
+    batch = jax.tree.map(axis("batch"), specs, is_leaf=_is_spec)
+    seq = jax.tree.map(axis("kv_seq"), specs, is_leaf=_is_spec)
+    return batch, seq

@@ -121,7 +121,7 @@ class EncDecLM:
 
     # ---------------------------------------------------------------- decoder
     def _dec_block(self, x, bp, *, positions, cache=None, cache_index=None,
-                   enc_out=None, cross_kv=None):
+                   enc_out=None, cross_kv=None, chunked=False):
         cfg = self.cfg
         h = layernorm(x, bp["ln1"])
         if cache is None:
@@ -131,7 +131,7 @@ class EncDecLM:
         else:
             a, new_cache = layers.attention(h, bp["self_attn"], cfg.replace(use_rope=False),
                                             positions=positions, cache=cache,
-                                            cache_index=cache_index)
+                                            cache_index=cache_index, chunked=chunked)
         x = x + a
         h = layernorm(x, bp["ln_x"])
         if cross_kv is not None:
@@ -232,6 +232,38 @@ class EncDecLM:
                         "cross_k": ck.astype(cache["cross_k"].dtype),
                         "cross_v": cv.astype(cache["cross_v"].dtype),
                         "pos": jnp.asarray(T, jnp.int32)}
+
+    def prefill_chunk(self, params, tokens, cache, extra=None):
+        """Prefill continuation from ``cache["pos"]``. The encoder (and the
+        per-layer cross K/V) only needs to run while the cross buffers are
+        cold, so ``extra["frames"]`` is required on the first chunk; later
+        chunks reuse the cached cross K/V and skip the encoder entirely."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        if extra and "frames" in extra:
+            enc_out = self.encode(params, extra["frames"])
+            ck, cv = self._cross_kv_all(params, enc_out)
+            cache = dict(cache)
+            cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+            cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        B, T = tokens.shape
+        positions = pos + jnp.arange(T)
+        x = self._embed_dec(tokens, params, positions)
+
+        def body(x, inp):
+            bp, lc, lck, lcv = inp
+            x, nc = self._dec_block(x, bp, positions=positions, cache=lc,
+                                    cache_index=pos, cross_kv=(lck, lcv),
+                                    chunked=True)
+            return x, nc
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["dec_blocks"],
+                                             (cache["k"], cache["v"]),
+                                             cache["cross_k"], cache["cross_v"]))
+        x = layernorm(x, params["dec_ln"])
+        logits = layers.unembed(x[:, -1:], params["embed"], cfg)[:, 0]
+        return logits, {"k": nk, "v": nv, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"], "pos": pos + T}
 
     def decode_step(self, params, token, cache, extra=None):
         cfg = self.cfg

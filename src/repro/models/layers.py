@@ -132,14 +132,19 @@ def update_cache_at(buf, new, idx, axis: int):
 
 
 def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
-              kv_len=None, context=None, logit_soft_cap=0.0):
-    """GQA attention. Three modes:
+              kv_len=None, context=None, logit_soft_cap=0.0, chunked=False):
+    """GQA attention. Four modes:
 
       * full/prefill:  cache is None        -> causal self-attention; if
         ``cache_index`` is provided the computed K/V are also returned for
         cache initialization.
       * decode:        cache=(k, v) full-size buffers, cache_index=pos scalar
                        -> writes the new K/V at pos, attends with kv_len mask.
+      * chunked prefill: cache=(k, v), S > 1, chunked=True, cache_index=start
+                       -> writes the chunk's K/V at ``start`` and attends the
+                       chunk against the cached prefix + itself (causal with
+                       q_offset); used for interleaved admissions in the
+                       continuous batcher.
       * cross:         context=(B, Sc, D) encoder/vision states -> K/V from
                        context, no causal mask, no rope.
     """
@@ -172,6 +177,13 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
             out = ops.decode_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
                                        kv_len=jnp.asarray(cache_index) + 1, impl=impl,
                                        logit_soft_cap=logit_soft_cap)
+        elif chunked:  # prompt chunk at offset: attend prefix + chunk
+            ck = update_cache_at(ck, k, cache_index, axis=2)
+            cv = update_cache_at(cv, v, cache_index, axis=2)
+            new_cache = (ck, cv)
+            out = ops.chunk_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                      q_offset=cache_index, kv_len=cache_index + S,
+                                      impl=impl, logit_soft_cap=logit_soft_cap)
         else:  # prefill into cache
             ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), 0, axis=2)
             cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), 0, axis=2)

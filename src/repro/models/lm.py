@@ -81,14 +81,16 @@ class TransformerLM:
         return init_params(self.param_defs(), rng, self.cfg.pdtype())
 
     # ------------------------------------------------------------------ blocks
-    def _attn(self, x, bp, *, positions, cache=None, cache_index=None):
+    def _attn(self, x, bp, *, positions, cache=None, cache_index=None,
+              chunked=False):
         cfg = self.cfg
         if cfg.use_mla:
             return mla_mod.mla_attention(x, bp, cfg, positions=positions,
                                          cache=cache, cache_index=cache_index,
-                                         absorbed=self.mla_absorbed)
+                                         absorbed=self.mla_absorbed, chunked=chunked)
         return layers.attention(x, bp, cfg, positions=positions,
-                                cache=cache, cache_index=cache_index)
+                                cache=cache, cache_index=cache_index,
+                                chunked=chunked)
 
     def _mlp(self, x, bp, moe_block: bool, is_eval: bool):
         cfg = self.cfg
@@ -98,7 +100,7 @@ class TransformerLM:
         return layers.mlp(x, bp, cfg)
 
     def _block(self, x, bp, *, positions, cache=None, cache_index=None,
-               moe_block=True, is_eval=False):
+               moe_block=True, is_eval=False, chunked=False):
         cfg = self.cfg
         h = layers.rmsnorm(x, bp["ln1"], cfg)
         if cache is None:
@@ -106,7 +108,8 @@ class TransformerLM:
             new_cache = None
         else:
             a, new_cache = self._attn(h, bp["attn"], positions=positions,
-                                      cache=cache, cache_index=cache_index)
+                                      cache=cache, cache_index=cache_index,
+                                      chunked=chunked)
         x = x + a
         x = x + self._mlp(layers.rmsnorm(x, bp["ln2"], cfg), bp["mlp"], moe_block,
                           is_eval or cache is not None)
@@ -246,7 +249,7 @@ class TransformerLM:
         return cache
 
     # ------------------------------------------------------------------ prefill / decode
-    def _run_cached(self, params, x, positions, cache, cache_index):
+    def _run_cached(self, params, x, positions, cache, cache_index, chunked=False):
         """Shared prefill/decode layer loop. x (B, S, D)."""
         cfg = self.cfg
         new_cache = dict(cache)
@@ -256,7 +259,8 @@ class TransformerLM:
         for i in range(cfg.first_dense_layers):
             x, val = self._block(x, params[f"dense{i}"], positions=positions,
                                  cache=self._dense_cache(cache, i),
-                                 cache_index=cache_index, moe_block=False)
+                                 cache_index=cache_index, moe_block=False,
+                                 chunked=chunked)
             new_cache = self._store_dense(new_cache, i, val)
 
         if cfg.use_mla:
@@ -269,7 +273,7 @@ class TransformerLM:
         def body(x, inp):
             bp, idx, lc = inp
             x, nc = self._block(x, bp, positions=positions, cache=lc,
-                                cache_index=cache_index)
+                                cache_index=cache_index, chunked=chunked)
             if cross_kv is not None and cross_kv[0] is not None:
                 def do_cross(x):
                     inv = idx // every
@@ -304,6 +308,31 @@ class TransformerLM:
         head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
         logits = layers.unembed(x[:, -1:], head, cfg)[:, 0]
         new_cache["pos"] = jnp.asarray(T, jnp.int32)
+        return logits, new_cache
+
+    def prefill_chunk(self, params, tokens, cache, extra=None):
+        """Prefill continuation: process a prompt chunk starting at
+        ``cache["pos"]`` (scalar), attending against the already-cached
+        prefix. The first chunk of a prompt is just ``pos == 0``. Long
+        admissions in the continuous batcher are split into fixed-size
+        chunks so decode ticks can interleave between them."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        start = cache["pos"]
+        x = layers.embed(tokens, params["embed"], cfg)
+        positions = start + jnp.arange(T)
+        context = self._vision_context(params, (extra or {}).get("vision"))
+        if self.has_cross and context is not None:
+            ck, cv = self._cross_kv_all(params, context)
+            cache = dict(cache)
+            cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+            cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        x, new_cache = self._run_cached(params, x, positions, cache,
+                                        cache_index=start, chunked=True)
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(x[:, -1:], head, cfg)[:, 0]
+        new_cache["pos"] = start + T
         return logits, new_cache
 
     def decode_step(self, params, token, cache, extra=None):

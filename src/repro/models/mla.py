@@ -48,8 +48,12 @@ def _norm(x, w, eps):
 
 
 def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
-                  absorbed: bool = False):
+                  absorbed: bool = False, chunked: bool = False):
     """x (B, S, D). cache = (c_kv (B, Smax, r), k_rope (B, Smax, dr)) or None.
+
+    ``chunked`` (S > 1, cache given): the tokens are a prompt chunk whose
+    first position is ``cache_index`` — latents are written at that offset
+    and the chunk attends against the cached prefix plus itself.
 
     Returns y (or (y, new_cache) when cache is given).
     """
@@ -72,7 +76,7 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
     if cache is not None:
         from repro.models.layers import update_cache_at
         cc, cr = cache
-        at = cache_index if S == 1 else 0
+        at = cache_index if (S == 1 or chunked) else 0
         cc = update_cache_at(cc, c_kv, at, axis=1)
         cr = update_cache_at(cr, k_rope, at, axis=1)
         new_cache = (cc, cr)
@@ -80,6 +84,10 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
             kv_latent, k_rope_all = cc.astype(x.dtype), cr.astype(x.dtype)
             Skv = kv_latent.shape[1]
             kv_len = cache_index + 1
+        elif chunked:  # prompt chunk at offset: attend cached prefix + chunk
+            kv_latent, k_rope_all = cc.astype(x.dtype), cr.astype(x.dtype)
+            Skv = kv_latent.shape[1]
+            kv_len = cache_index + S
         else:  # prefill: attend against the fresh latents (cache tail is junk)
             kv_latent, k_rope_all = c_kv, k_rope
             Skv = S
@@ -120,6 +128,10 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
         if cache is not None and S == 1:
             out = ops.decode_attention(q_full, k_full, _pad_v(vv, dn + dr),
                                        kv_len=kv_len, scale=scale, impl=impl)[..., :dv]
+        elif cache is not None and chunked:
+            out = ops.chunk_attention(q_full, k_full, _pad_v(vv, dn + dr),
+                                      q_offset=cache_index, kv_len=kv_len,
+                                      scale=scale, impl=impl)[..., :dv]
         else:
             out = ops.flash_attention(q_full, k_full, _pad_v(vv, dn + dr),
                                       causal=True, scale=scale, impl=impl)[..., :dv]

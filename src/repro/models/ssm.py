@@ -69,9 +69,13 @@ def _split_inproj(h, cfg: ModelConfig):
     return z, xbc, dt
 
 
-def mamba2_block(x, p, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
+def mamba2_block(x, p, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+                 chunk_states=None):
     """x (B, T, D). When conv_state/ssm_state given and T==1, runs the
     recurrent step; otherwise the chunked SSD scan (training/prefill).
+    ``chunk_states=(conv (B,K-1,C), ssm (B,H,P,N))`` runs the scan as a
+    *continuation* from those states (chunked prefill): the causal conv
+    is seeded with the previous K-1 inputs and the SSD scan with h0.
     Returns (y, new_conv_state, new_ssm_state) — states None outside decode.
     """
     B, T, D = x.shape
@@ -95,6 +99,24 @@ def mamba2_block(x, p, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
                                   p["D"].astype(jnp.float32), ssm_state)
         y = y.reshape(B, 1, di)
         new_states = (new_conv, new_ssm)
+    elif chunk_states is not None:  # scan continuation (chunked prefill)
+        conv_prev, h0 = chunk_states
+        window = jnp.concatenate([conv_prev.astype(xbc.dtype), xbc], axis=1)
+        c_out = jax.nn.silu(_causal_conv(window, p["conv_w"], p["conv_b"])[:, -T:])
+        xs, Bm, Cm = c_out[..., :di], c_out[..., di : di + N], c_out[..., di + N :]
+        pad = (-T) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dtp = dt
+        y, h_last = ops.ssd(xs.reshape(B, T + pad, H, P), dtp.reshape(B, T + pad, H),
+                            A, Bm, Cm, p["D"].astype(jnp.float32),
+                            chunk=cfg.ssm_chunk, h0=h0, impl=impl)
+        y = y[:, :T].reshape(B, T, di)
+        new_states = (window[:, -(cfg.ssm_conv_kernel - 1):, :], h_last)
     else:
         c_out = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
         xs, Bm, Cm = c_out[..., :di], c_out[..., di : di + N], c_out[..., di + N :]
@@ -173,7 +195,8 @@ class HybridLM:
         return init_params(self.param_defs(), rng, self.cfg.pdtype())
 
     # ---- shared attention block ----
-    def _shared_block(self, x, sp, *, positions, cache=None, inv=None, pos=None):
+    def _shared_block(self, x, sp, *, positions, cache=None, inv=None, pos=None,
+                      chunked=False):
         cfg = self.cfg
         h = layers.rmsnorm(x, sp["ln1"], cfg)
         if cache is None:
@@ -184,7 +207,8 @@ class HybridLM:
             k_i = jax.lax.dynamic_index_in_dim(ck, inv, 0, keepdims=False)
             v_i = jax.lax.dynamic_index_in_dim(cv, inv, 0, keepdims=False)
             a, (nk, nv) = layers.attention(h, sp["attn"], cfg, positions=positions,
-                                           cache=(k_i, v_i), cache_index=pos)
+                                           cache=(k_i, v_i), cache_index=pos,
+                                           chunked=chunked)
             ck = jax.lax.dynamic_update_index_in_dim(ck, nk, inv, 0)
             cv = jax.lax.dynamic_update_index_in_dim(cv, nv, inv, 0)
             new_cache = (ck, cv)
@@ -276,6 +300,45 @@ class HybridLM:
         new_cache = {"conv": conv.astype(cache["conv"].dtype), "ssm": ssm,
                      "attn_k": ak, "attn_v": av,
                      "pos": jnp.asarray(T, jnp.int32)}
+        return logits, new_cache
+
+    def prefill_chunk(self, params, tokens, cache, extra=None):
+        """Prefill continuation from ``cache["pos"]``: every Mamba layer's
+        SSD scan resumes from its cached (conv, ssm) state and the shared
+        attention block's K/V chunk is written at the position offset."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        pos = cache["pos"]
+        x = layers.embed(tokens, params["embed"], cfg)
+        positions = pos + jnp.arange(T)
+        k = cfg.attn_every
+
+        def body(carry, inp):
+            x, ak, av = carry
+            bp, idx, conv_st, ssm_st = inp
+            x, new_conv, new_ssm = mamba2_block(x, bp, cfg,
+                                                chunk_states=(conv_st, ssm_st))
+
+            def with_attn(args):
+                x, ak, av = args
+                inv = idx // k
+                x, (ak, av) = self._shared_block(x, params["shared"],
+                                                 positions=positions,
+                                                 cache=(ak, av), inv=inv, pos=pos,
+                                                 chunked=True)
+                return x, ak, av
+
+            x, ak, av = jax.lax.cond((idx % k) == (k - 1), with_attn,
+                                     lambda a: a, (x, ak, av))
+            return (x, ak, av), (new_conv, new_ssm)
+
+        (x, ak, av), (conv, ssm) = jax.lax.scan(
+            body, (x, cache["attn_k"], cache["attn_v"]),
+            (params["blocks"], jnp.arange(cfg.n_layers), cache["conv"], cache["ssm"]))
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        logits = layers.unembed(x[:, -1:], params["lm_head"], cfg)[:, 0]
+        new_cache = {"conv": conv.astype(cache["conv"].dtype), "ssm": ssm,
+                     "attn_k": ak, "attn_v": av, "pos": pos + T}
         return logits, new_cache
 
     # ---- decode ----

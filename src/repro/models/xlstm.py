@@ -136,6 +136,13 @@ def mlstm_block(x, p, cfg: ModelConfig, state=None):
     if T == 1 and state is not None:
         c_out, new_conv = _conv_step(uu[:, 0], conv_state, p["conv_w"], p["conv_b"])
         c_out = jax.nn.silu(c_out)[:, None]
+    elif state is not None:
+        # scan continuation (chunked prefill): seed the causal conv with
+        # the cached last K-1 inputs instead of zeros
+        K = p["conv_w"].shape[0]
+        window = jnp.concatenate([conv_state.astype(uu.dtype), uu], axis=1)
+        c_out = jax.nn.silu(_causal_conv(window, p["conv_w"], p["conv_b"])[:, -T:])
+        new_conv = window[:, -(K - 1):, :]
     else:
         c_out = jax.nn.silu(_causal_conv(uu, p["conv_w"], p["conv_b"]))
         K = p["conv_w"].shape[0]
@@ -290,7 +297,12 @@ class XLSTMLM:
         x, states = self._run_blocks(params, x, cache["states"])
         x = layers.rmsnorm(x, params["ln_f"], cfg)
         logits = layers.unembed(x[:, -1:], params["lm_head"], cfg)[:, 0]
-        return logits, {"states": states, "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+        # recurrent state carries all history -> prefill is already a
+        # continuation; pos advances from wherever the cache left off
+        return logits, {"states": states, "pos": cache["pos"] + tokens.shape[1]}
+
+    # both cells are true recurrences, so a chunk is just another prefill
+    prefill_chunk = prefill
 
     def decode_step(self, params, token, cache, extra=None):
         cfg = self.cfg

@@ -127,7 +127,11 @@ class ServingEngine:
         cache = self.model.init_cache(B, self.max_seq)
         logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
         outs = [[] for _ in range(B)]
-        tok = jnp.argmax(logits, -1)[:, None]
+        # sample the first token exactly like the decode loop (and like
+        # generate()) — hard-coded argmax made batch and single-request
+        # outputs diverge at temperature > 0
+        self.rng, k = jax.random.split(self.rng)
+        tok = sample(logits, k, self.sampler)[:, None]
         for i in range(B):
             outs[i].append(int(tok[i, 0]))
         for _ in range(max_new_tokens - 1):

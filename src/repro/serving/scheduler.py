@@ -1,13 +1,26 @@
-"""Continuous batching scheduler.
+"""Continuous batching scheduler — fused device-side decode ticks.
 
-Fixed decode batch of B slots over one shared KV cache; new requests
-are prefillled at batch=1 and spliced into a free slot (per-leaf batch
-axis derived from the model's cache_specs), finished slots are freed
-immediately. Per-slot positions ride in cache["pos"] as a (B,) vector —
-the decode paths accept either a scalar or a vector.
+Fixed decode batch of B slots over one shared KV cache. One scheduler
+tick is ONE fused, jitted device step: decode + sampling + per-slot
+EOS/length masking all run on device, and the host reads back a single
+packed (B, 4) int32 array per tick — at most one host<->device token
+transfer regardless of slot count (the seed read every slot's token
+individually).
+
+Admissions use **chunked prefill**: a new request's prompt is split into
+fixed-size chunks (``prefill_chunk``) processed one per tick between
+decode steps, so a long-prompt admission never stalls in-flight decodes
+for its full prefill. The finished batch=1 cache is spliced into its
+slot with a **bucketed/paged copy**: only the pages actually used by the
+prompt are written along every "kv_seq" axis (see
+``repro.models.common.cache_axes``); recurrent-state leaves (SSM, xLSTM
+conv windows) are copied whole per slot. Per-slot positions ride in
+``cache["pos"]`` as a (B,) vector — all model decode paths accept either
+a scalar or a vector.
 
 Straggler/fault hooks: a per-request deadline; requests that exceed it
-are cancelled and their slot reclaimed (the dual-channel relay reaps the
+are cancelled, their ``on_done`` fires with ``cancelled=True``, and the
+slot is re-admitted *on the same tick* (the dual-channel relay reaps the
 channel on its own timer — see repro.core.relay).
 """
 
@@ -21,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.common import cache_axes, round_up
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.tokenizer import ByteTokenizer
 
@@ -39,75 +53,180 @@ class Request:
     cancelled: bool = False
 
 
+@dataclass
+class _Admission:
+    """An in-flight chunked prefill: one chunk advances per tick."""
+    req: Request
+    slot: int
+    cache: dict                      # batch=1 cache being filled
+    chunks: list                     # list of equal-length token lists
+    i: int = 0
+
+
 class ContinuousBatcher:
-    def __init__(self, engine, *, slots: int = 4, max_seq: int | None = None):
+    def __init__(self, engine, *, slots: int = 4, max_seq: int | None = None,
+                 prefill_chunk: int = 32, page: int = 16):
         self.engine = engine
         self.model = engine.model
         self.cfg = engine.cfg
         self.B = slots
         self.max_seq = max_seq or engine.max_seq
         self.tokenizer: ByteTokenizer = engine.tokenizer
+        self.prefill_chunk = prefill_chunk
+        self.page = page
 
         self.cache = self.model.init_cache(self.B, self.max_seq)
         self.cache["pos"] = jnp.zeros((self.B,), jnp.int32)
-        self._batch_axes = self._derive_batch_axes()
+        self._batch_axes, self._seq_axes = cache_axes(self.model.cache_specs())
         self.active: list[Optional[Request]] = [None] * self.B
         self.queue: list[Request] = []
+        self._adm: Optional[_Admission] = None
+        self._freed = False
         self.tok = jnp.zeros((self.B, 1), jnp.int32)
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill = jax.jit(self.model.prefill)
 
-    # ------------------------------------------------------------ internals
-    def _derive_batch_axes(self):
-        specs = self.model.cache_specs()
+        # host mirror of the device-side per-slot state (passed into the
+        # fused step each tick; tiny int/bool vectors, not token traffic)
+        self._active_m = np.zeros(self.B, bool)
+        self._fresh = np.zeros(self.B, bool)
+        self._gen = np.zeros(self.B, np.int32)
+        self._maxgen = np.full(self.B, 1, np.int32)
 
-        def axis(spec):
-            if not isinstance(spec, tuple):
-                return -1
-            return spec.index("batch") if "batch" in spec else -1
+        self._prefill = jax.jit(self.model.prefill_chunk)
+        self._fused = jax.jit(self._make_fused())
+        self._first = jax.jit(self._make_first())
+        self._splice_fns: dict[int, Callable] = {}
+        self.transfers = 0           # device->host syncs; one per decode tick
 
-        # -1 sentinel (None leaves vanish from pytrees and break alignment)
-        return jax.tree.map(axis, specs,
-                            is_leaf=lambda s: isinstance(s, tuple) and
-                            all(isinstance(e, (str, type(None))) for e in s))
+    # ------------------------------------------------------------ jitted fns
+    def _make_fused(self):
+        """One tick: decode all slots, sample, mask EOS/length per slot.
 
-    def _splice(self, slot: int, one_cache):
-        """Insert a batch=1 cache into slot ``slot`` of the shared cache."""
-        flat_axes = jax.tree.leaves(self._batch_axes)
-        buf_leaves, treedef = jax.tree.flatten(self.cache)
-        new_leaves = jax.tree.leaves(one_cache)
-        assert len(buf_leaves) == len(new_leaves) == len(flat_axes)
-        out = [jax.lax.dynamic_update_slice_in_dim(b, n.astype(b.dtype), slot, axis=a)
-               if a >= 0 else b
-               for b, n, a in zip(buf_leaves, new_leaves, flat_axes)]
-        self.cache = treedef.unflatten(out)
-        # per-slot position
-        pos = np.array(self.cache["pos"])
-        pos[slot] = int(np.asarray(one_cache["pos"]))
-        self.cache["pos"] = jnp.asarray(pos)
+        Inputs beyond params/tok/cache are the per-slot state vectors:
+        active, fresh (admitted since last tick), gen (tokens produced,
+        incl. the prefill token), max_gen. Returns the next tok buffer,
+        the cache, and a packed (B, 4) int32 [first_echo, next, emitted,
+        done] — the tick's single token transfer.
+        """
+        model, sampler = self.model, self.engine.sampler
+        eos, pad = self.tokenizer.eos_id, self.tokenizer.pad_id
 
-    # ------------------------------------------------------------ API
+        def fused(params, tok, cache, active, fresh, gen, max_gen, rng):
+            # freshly-admitted slots whose *prefill* token already ended
+            # the request (EOS, or max_new_tokens == 1) skip emission
+            done_pre = active & fresh & ((tok[:, 0] == eos) | (gen >= max_gen))
+            run = active & ~done_pre
+            logits, cache = model.decode_step(params, tok, cache)
+            nxt = sample(logits, rng, sampler)
+            nxt = jnp.where(run, nxt, pad).astype(jnp.int32)
+            gen2 = gen + run.astype(gen.dtype)
+            done_now = run & ((nxt == eos) | (gen2 >= max_gen))
+            alive = run & ~done_now
+            # park finished/empty slots at pos 0 so their (masked, unread)
+            # cache writes can never run off the end of the seq axis
+            cache["pos"] = jnp.where(alive, cache["pos"], 0)
+            packed = jnp.stack(
+                [tok[:, 0], nxt, run.astype(jnp.int32),
+                 (done_pre | done_now).astype(jnp.int32)], axis=1)
+            return nxt[:, None], cache, packed
+
+        return fused
+
+    def _make_first(self):
+        """Sample an admission's first token from its prefill logits and
+        drop it into the tok buffer — device-side, no host read."""
+        sampler = self.engine.sampler
+
+        def first(tok, logits, slot, rng):
+            t = sample(logits, rng, sampler).astype(tok.dtype)
+            return jax.lax.dynamic_update_slice(tok, t[:, None], (slot, 0))
+
+        return first
+
+    def _get_splice(self, used: int):
+        """Jitted slot splice, specialized per bucketed prompt length:
+        leaves with a "kv_seq" axis copy only the first ``used`` positions
+        (a dynamic_update_slice over pages, not a full-leaf rewrite);
+        batch-only leaves copy the whole slot slice."""
+        fn = self._splice_fns.get(used)
+        if fn is not None:
+            return fn
+        batch_axes = jax.tree.leaves(self._batch_axes)
+        seq_axes = jax.tree.leaves(self._seq_axes)
+
+        def splice(cache, one, slot):
+            cache = dict(cache)
+            pos = cache["pos"]
+            cache["pos"] = jax.lax.dynamic_update_slice(
+                pos, one["pos"].reshape(1).astype(pos.dtype), (slot,))
+            leaves, treedef = jax.tree.flatten(cache)
+            ones = jax.tree.leaves(one)
+            assert len(leaves) == len(ones) == len(batch_axes), \
+                "init_cache / cache_specs structure drift"
+            out = []
+            for buf, new, ba, sa in zip(leaves, ones, batch_axes, seq_axes):
+                if ba < 0:           # no batch axis (pos handled above)
+                    out.append(buf)
+                    continue
+                upd = new.astype(buf.dtype)
+                if sa >= 0 and used < upd.shape[sa]:
+                    upd = jax.lax.slice_in_dim(upd, 0, used, axis=sa)
+                starts = tuple(slot if d == ba else 0 for d in range(buf.ndim))
+                out.append(jax.lax.dynamic_update_slice(buf, upd, starts))
+            return treedef.unflatten(out)
+
+        fn = jax.jit(splice)
+        self._splice_fns[used] = fn
+        return fn
+
+    # ------------------------------------------------------------ admission
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self):
-        for slot in range(self.B):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                ids = req.prompt_ids[: self.max_seq - req.max_new_tokens - 1]
-                b = self.engine._bucket(len(ids))
-                ids = [self.tokenizer.pad_id] * (b - len(ids)) + ids
-                one = self.model.init_cache(1, self.max_seq)
-                logits, one = self._prefill(self.engine.params,
-                                            jnp.asarray([ids], jnp.int32), one)
-                self._splice(slot, one)
-                t = int(jnp.argmax(logits, -1)[0])
-                req.output_ids.append(t)
-                if req.on_token:
-                    req.on_token(t, self.tokenizer.decode_token(t))
-                self.tok = self.tok.at[slot, 0].set(t)
-                self.active[slot] = req
+    def _advance_admissions(self):
+        """Start or advance the in-flight admission by ONE prefill chunk.
+        Called at tick start and again after reaping, so a slot freed by
+        cancellation is re-admitted on the same tick."""
+        if self._adm is None:
+            if not self.queue:
+                return
+            slot = next((s for s in range(self.B) if self.active[s] is None), None)
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            ids = list(req.prompt_ids)[: self.max_seq - req.max_new_tokens - 1]
+            # left-pad to the same power-of-two bucket single-request
+            # generation uses (numerical parity), then chunk it
+            b = self.engine._bucket(len(ids))
+            ids = [self.tokenizer.pad_id] * (b - len(ids)) + ids
+            size = min(self.prefill_chunk, b)
+            if b % size:             # bucket capped at max_seq-1: one chunk
+                size = b
+            one = self.model.init_cache(1, self.max_seq)
+            self._adm = _Admission(req=req, slot=slot, cache=one,
+                                   chunks=[ids[i:i + size]
+                                           for i in range(0, b, size)])
+        adm = self._adm
+        chunk = jnp.asarray([adm.chunks[adm.i]], jnp.int32)
+        logits, adm.cache = self._prefill(self.engine.params, chunk, adm.cache)
+        adm.i += 1
+        if adm.i < len(adm.chunks):
+            return
+        # prefill complete: paged splice + device-side first token
+        slot, req = adm.slot, adm.req
+        used = min(round_up(sum(len(c) for c in adm.chunks), self.page),
+                   self.max_seq)
+        self.cache = self._get_splice(used)(self.cache, adm.cache,
+                                            jnp.asarray(slot, jnp.int32))
+        self.engine.rng, k = jax.random.split(self.engine.rng)
+        self.tok = self._first(self.tok, logits, jnp.asarray(slot, jnp.int32), k)
+        self.active[slot] = req
+        self._active_m[slot] = True
+        self._fresh[slot] = True
+        self._gen[slot] = 1          # the prefill token counts
+        self._maxgen[slot] = req.max_new_tokens
+        self._adm = None
 
+    # ------------------------------------------------------------ tick
     def _finish(self, slot: int, cancelled=False):
         req = self.active[slot]
         if req is None:
@@ -116,33 +235,55 @@ class ContinuousBatcher:
         if req.on_done:
             req.on_done(req)
         self.active[slot] = None
+        self._active_m[slot] = False
+        self._freed = True
+
+    def _in_flight(self) -> int:
+        return (sum(r is not None for r in self.active)
+                + (self._adm is not None))
 
     def step(self) -> int:
-        """One scheduler tick: admit, decode, emit, reap. Returns #active."""
-        self._admit()
-        if not any(self.active):
-            return 0
-        logits, self.cache = self._decode(self.engine.params, self.tok, self.cache)
+        """One scheduler tick: admit (one chunk), fused decode, emit, reap,
+        re-admit. Returns the number of requests still in flight (active
+        slots plus a mid-prefill admission), so callers may loop on it."""
+        self._freed = False
+        self._advance_admissions()
+        if not any(r is not None for r in self.active):
+            return self._in_flight()
         self.engine.rng, k = jax.random.split(self.engine.rng)
-        nxt = sample(logits, k, self.engine.sampler)
-        self.tok = nxt[:, None]
+        self.tok, self.cache, packed = self._fused(
+            self.engine.params, self.tok, self.cache,
+            self._active_m, self._fresh, self._gen, self._maxgen, k)
+        packed = np.asarray(packed)  # the tick's one token transfer
+        self.transfers += 1
         now = time.perf_counter()
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            t = int(nxt[slot])
-            req.output_ids.append(t)
-            if req.on_token:
-                req.on_token(t, self.tokenizer.decode_token(t))
-            over_deadline = req.deadline_s and (now - req.submitted_at) > req.deadline_s
-            if (len(req.output_ids) >= req.max_new_tokens
-                    or t == self.tokenizer.eos_id or over_deadline):
-                self._finish(slot, cancelled=bool(over_deadline))
-        return sum(r is not None for r in self.active)
+            first, nxt, emitted, done = (int(v) for v in packed[slot])
+            if self._fresh[slot]:    # prefill token, deferred one tick
+                req.output_ids.append(first)
+                if req.on_token:
+                    req.on_token(first, self.tokenizer.decode_token(first))
+                self._fresh[slot] = False
+            if emitted:
+                req.output_ids.append(nxt)
+                self._gen[slot] += 1
+                if req.on_token:
+                    req.on_token(nxt, self.tokenizer.decode_token(nxt))
+            over = req.deadline_s and (now - req.submitted_at) > req.deadline_s
+            if done or over:
+                self._finish(slot, cancelled=bool(over))
+        # same-tick reuse of reaped slots — but never advance an already
+        # in-flight admission a second chunk (one chunk per tick)
+        if self._freed and self._adm is None:
+            self._advance_admissions()
+        return self._in_flight()
 
     def run_until_drained(self, max_steps: int = 10000):
         steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
+        while (self.queue or self._adm is not None
+               or any(r is not None for r in self.active)) and steps < max_steps:
             self.step()
             steps += 1
         return steps

@@ -1,0 +1,47 @@
+"""Docs stay honest: every module path named in docs/ARCHITECTURE.md and
+docs/serving.md must exist, and README links must resolve. Run by CI's
+docs check as well as the tier-1 suite."""
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "docs" / "ARCHITECTURE.md", ROOT / "docs" / "serving.md"]
+
+
+def _named_paths(text):
+    # module paths like src/repro/core/judge.py or benchmarks/latency.py
+    # (strip any ::symbol suffix)
+    for m in re.finditer(r"(?:src/repro|benchmarks|examples|docs|tests)"
+                         r"(?:/[\w.-]+)+\.(?:py|md)", text):
+        yield m.group(0)
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_architecture_docs_exist_and_modules_resolve(doc):
+    assert doc.exists(), f"{doc} missing"
+    text = doc.read_text()
+    missing = [p for p in _named_paths(text) if not (ROOT / p).exists()]
+    assert not missing, f"{doc.name} names nonexistent modules: {missing}"
+
+
+def test_readme_links_docs():
+    readme = (ROOT / "README.md").read_text()
+    for target in ("docs/ARCHITECTURE.md", "docs/serving.md"):
+        assert target in readme, f"README must link {target}"
+        assert (ROOT / target).exists()
+
+
+def test_docs_name_the_contract_symbols():
+    """The serving doc documents the real contract: the symbols it names
+    must exist in the codebase."""
+    text = (ROOT / "docs" / "serving.md").read_text()
+    common = (ROOT / "src/repro/models/common.py").read_text()
+    sched = (ROOT / "src/repro/serving/scheduler.py").read_text()
+    assert "cache_axes" in text and "def cache_axes" in common
+    assert "prefill_chunk" in text and "prefill_chunk" in sched
+    for fam in ("lm", "ssm", "xlstm", "encdec"):
+        src = (ROOT / f"src/repro/models/{fam}.py").read_text()
+        assert "prefill_chunk" in src, f"{fam} lost the prefill_chunk contract"

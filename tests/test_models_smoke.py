@@ -80,6 +80,35 @@ def test_prefill_decode_matches_forward_fp32(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_prefill_matches_forward_fp32(arch):
+    """prefill_chunk is a continuation: prefilling a prompt in two chunks
+    (then decoding) must reproduce the full forward exactly in fp32. This
+    is the cache contract the continuous batcher's interleaved admissions
+    rely on (docs/serving.md)."""
+    cfg = get_smoke_config(arch).replace(remat=False, compute_dtype="float32")
+    if cfg.n_experts:  # no-drop capacity so routing is path-independent
+        nd = cfg.n_experts / cfg.top_k
+        cfg = cfg.replace(capacity_factor=nd, eval_capacity_factor=nd)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, C1, T = 2, 8, 12
+    tokens = jax.random.randint(RNG, (B, T + 2), 0, cfg.vocab_size)
+    ex = extra_for(cfg, B, RNG)
+    full = model.forward(params, tokens, ex)
+    cache = model.init_cache(B, 32)
+    # first chunk carries the encoder/vision context; later chunks reuse it
+    _, cache = model.prefill_chunk(params, tokens[:, :C1], cache, ex)
+    last, cache = model.prefill_chunk(params, tokens[:, C1:T], cache, None)
+    assert int(cache["pos"]) == T
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, T - 1]),
+                               rtol=1e-4, atol=1e-4)
+    for t in range(T, T + 2):
+        lg, cache = model.decode_step(params, tokens[:, t:t + 1], cache, ex)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
 def test_full_config_matches_assignment(arch):
     """The full configs encode the exact assigned hyperparameters."""
     cfg = get_config(arch)
