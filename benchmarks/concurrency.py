@@ -1,0 +1,151 @@
+"""Concurrent multi-session throughput through the HPC-as-API proxy.
+
+The paper's headline numbers are per query; this benchmark measures what
+the middleware does under *traffic*: N concurrent proxy SSE sessions,
+each running the full dual-channel flow (auth -> control-plane dispatch
+-> remote fn -> relay -> SSE). Two engine modes on the SAME path:
+
+  * serial     — the pre-session-broker behaviour: every remote task
+                 runs one blocking ``engine.generate`` at a time, so
+                 concurrent sessions queue on the engine lock;
+  * concurrent — ``ServingEngine.submit``: sessions interleave their
+                 decode ticks in one shared continuous batch.
+
+Reports aggregate tok/s and per-session TTFT (p50/max) at each
+concurrency level, the concurrent/serial speedup at the highest level,
+and the TTFT ratio at concurrency 1 (scheduler overhead must not
+regress the single-user experience).
+
+Usage: python benchmarks/concurrency.py [--smoke] [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import time
+
+from repro.core import build_system
+
+
+def _run_sessions(system, n: int, tokens: int) -> dict:
+    """n concurrent proxy SSE sessions; per-session TTFT + window tok/s."""
+    bearers = [system.globus.issue_token(f"bench{i}@uic.edu") for i in range(n)]
+    rows = [None] * n
+    barrier = threading.Barrier(n)
+
+    # realistic prompt length (~100 chars): prefill compute dominates
+    # TTFT identically in both modes, so the c=1 comparison measures
+    # scheduler overhead, not thread-wakeup jitter
+    prompt = ("benchmark session {i}: summarize the deployment plan, list "
+              "the open risks, and propose the next three actions.")
+
+    def one(i):
+        barrier.wait()
+        t0 = time.perf_counter()
+        resp = system.proxy.handle_chat_completions(
+            {"messages": [{"role": "user", "content": prompt.format(i=i)}],
+             "max_tokens": tokens, "stream": True}, bearer=bearers[i])
+        assert resp.status == 200, resp.body
+        ttft = None
+        n_tok = 0
+        for frame in resp.stream:
+            if '"content"' not in frame or '"role"' in frame:
+                continue              # role/finish frames, [DONE]
+            if ttft is None:
+                ttft = time.perf_counter() - t0
+            n_tok += 1
+        rows[i] = {"t0": t0, "t1": time.perf_counter(), "ttft": ttft or 0.0,
+                   "n_tok": n_tok}
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = max(r["t1"] for r in rows) - min(r["t0"] for r in rows)
+    ttfts = sorted(r["ttft"] for r in rows)
+    total = sum(r["n_tok"] for r in rows)
+    return {
+        "concurrency": n,
+        "total_tokens": total,
+        "wall_s": wall,
+        "agg_tok_s": total / max(wall, 1e-9),
+        "ttft_p50": ttfts[len(ttfts) // 2],
+        "ttft_max": ttfts[-1],
+    }
+
+
+def run(concurrency=(1, 4, 16), tokens: int = 24, *, quiet: bool = False,
+        max_seq: int = 128, repeats: int = 4,
+        hpc_overrides: dict | None = None) -> dict:
+    top = max(concurrency)
+    if hpc_overrides is None:
+        # scale the HPC sim model up toward a realistic compute weight —
+        # at smoke size the engine is so cheap that Python relay/SSE
+        # plumbing, not decode, bounds throughput in BOTH modes
+        hpc_overrides = dict(d_model=256, n_layers=4, d_ff=512)
+    system = build_system(dispatch_latency_s=0.0, encrypt=False,
+                          max_seq=max_seq, scheduler_slots=top,
+                          hpc_workers=top + 2, hpc_overrides=hpc_overrides)
+    engine = system.engines["hpc"]
+
+    # warm BOTH paths outside every measured window: the serial path's
+    # prefill/decode shapes come from engine.warmup(); the concurrent
+    # path additionally compiles the broker's fused batch step + splice
+    for mode in (False, True):
+        engine.use_scheduler = mode
+        _run_sessions(system, min(2, top), 4)
+
+    results: dict = {"serial": {}, "concurrent": {}}
+    for mode in ("serial", "concurrent"):
+        engine.use_scheduler = mode == "concurrent"
+        for n in concurrency:
+            best = None
+            for _ in range(repeats):
+                r = _run_sessions(system, n, tokens)
+                if best is None or r["agg_tok_s"] > best["agg_tok_s"]:
+                    ttft_floor = min(best["ttft_p50"], r["ttft_p50"]) if best else r["ttft_p50"]
+                    best = dict(r, ttft_p50=ttft_floor)
+                else:
+                    best["ttft_p50"] = min(best["ttft_p50"], r["ttft_p50"])
+            results[mode][n] = best
+    engine.use_scheduler = True
+
+    speedup = (results["concurrent"][top]["agg_tok_s"]
+               / max(results["serial"][top]["agg_tok_s"], 1e-9))
+    c1 = min(concurrency)
+    ttft_ratio = (results["concurrent"][c1]["ttft_p50"]
+                  / max(results["serial"][c1]["ttft_p50"], 1e-9))
+    summary = {"speedup_at_max": speedup, "max_concurrency": top,
+               "ttft_c1_ratio": ttft_ratio}
+
+    if not quiet:
+        print(f"\n=== concurrent proxy sessions ({tokens} tokens/session, "
+              f"{top}-slot broker, best of {repeats}) ===")
+        print(f"{'mode':>11s} {'n':>3s} {'tok/s':>8s} {'ttft_p50':>9s} "
+              f"{'ttft_max':>9s} {'wall(s)':>8s}")
+        for mode in ("serial", "concurrent"):
+            for n, r in results[mode].items():
+                print(f"{mode:>11s} {n:3d} {r['agg_tok_s']:8.1f} "
+                      f"{r['ttft_p50']:9.3f} {r['ttft_max']:9.3f} "
+                      f"{r['wall_s']:8.2f}")
+        print(f"aggregate speedup at {top} sessions: {speedup:.2f}x "
+              f"(target >= 3x)")
+        print(f"TTFT at concurrency {c1}: concurrent/serial = "
+              f"{ttft_ratio:.2f}x (<= ~1x means no single-user regression)")
+    return {**results, "summary": summary}
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        out = run(concurrency=(1, 4), tokens=6, repeats=1)
+    else:
+        out = run(concurrency=(1, 4, 16),
+                  tokens=12 if "--quick" in sys.argv else 24)
+    print("\nsummary:", json.dumps(out["summary"]))
+    if smoke:
+        # CI smoke: the concurrent path must at least not lose to serial
+        assert out["summary"]["speedup_at_max"] > 1.0, out["summary"]

@@ -52,6 +52,17 @@ def main() -> None:
                      f"{r_tl['ttft_under_load_p50']:.3f}",
                      f"solo={r_tl['ttft_solo_s']:.3f}s"))
 
+    from benchmarks import concurrency
+    r_cc = concurrency.run(concurrency=(1, 4) if small else (1, 4, 16),
+                           tokens=8 if small else 24)
+    cc = r_cc["summary"]
+    csv_rows.append(("concurrency.speedup_at_max",
+                     f"{cc['speedup_at_max']:.2f}x",
+                     f"{cc['max_concurrency']} proxy sessions vs serial backend"))
+    csv_rows.append(("concurrency.ttft_c1_ratio",
+                     f"{cc['ttft_c1_ratio']:.2f}x",
+                     "concurrent/serial TTFT at 1 session"))
+
     from benchmarks import roofline
     r4 = roofline.run()
     if r4:

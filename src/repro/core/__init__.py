@@ -4,7 +4,7 @@ tier-aware summarization, HPC-as-API proxy."""
 from repro.core.crypto import AESGCM, InvalidTag, new_key
 from repro.core.relay import Relay, AuthError, RelayError, new_channel_id
 from repro.core.control_plane import ComputeEndpoint, TaskFailed, submit_with_retries
-from repro.core.data_plane import consume_tokens, produce_tokens
+from repro.core.data_plane import TokenProducer, consume_tokens, produce_tokens
 from repro.core.judge import Complexity, KeywordJudge, FeatureJudge, CachedJudge
 from repro.core.summarizer import TierAwareSummarizer, SummarizerPolicy, DEFAULT_POLICIES
 from repro.core.router import TierRouter, FALLBACK_CHAINS
@@ -20,7 +20,7 @@ __all__ = [
     "AESGCM", "InvalidTag", "new_key",
     "Relay", "AuthError", "RelayError", "new_channel_id",
     "ComputeEndpoint", "TaskFailed", "submit_with_retries",
-    "consume_tokens", "produce_tokens",
+    "TokenProducer", "consume_tokens", "produce_tokens",
     "Complexity", "KeywordJudge", "FeatureJudge", "CachedJudge",
     "TierAwareSummarizer", "SummarizerPolicy", "DEFAULT_POLICIES",
     "TierRouter", "FALLBACK_CHAINS", "StreamingHandler",

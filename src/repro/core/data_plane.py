@@ -48,6 +48,48 @@ def produce_tokens(relay: Relay, channel_id: str, secret: str, token_iter,
     return seq
 
 
+class TokenProducer:
+    """Push-style producer half: the session broker's ``on_token``
+    callback calls ``push`` directly, so a streaming session needs no
+    per-session pump thread or queue hop between the engine and the
+    relay (at 16 concurrent sessions those hops, not the engine, were
+    the throughput ceiling). ``push`` raises ChannelClosed on channel
+    teardown — inside a broker callback that cancels the session and
+    frees its decode slot."""
+
+    def __init__(self, relay: Relay, channel_id: str, secret: str,
+                 enc_key: bytes | None = None):
+        self._aes = AESGCM(enc_key) if enc_key else None
+        self._prod = relay.connect_producer(channel_id).authenticate(secret)
+        self.seq = 0
+
+    def _send(self, payload: dict):
+        self._prod.send(encrypt_envelope(self._aes, payload)
+                        if self._aes else payload)
+
+    def push(self, token_id, text: str):
+        self._send({"t": "token", "seq": self.seq,
+                    "id": int(token_id), "text": text})
+        self.seq += 1
+
+    def done(self) -> int:
+        """Terminate the stream normally; returns tokens relayed."""
+        try:
+            self._send({"t": "done", "seq": self.seq})
+        finally:
+            self._prod.close()
+        return self.seq
+
+    def fail(self, error: str):
+        """Best-effort in-band error + close (teardown may already have
+        made the channel unwritable)."""
+        try:
+            self._send({"t": "error", "seq": self.seq, "error": error})
+        except Exception:
+            pass
+        self._prod.close()
+
+
 def consume_tokens(relay: Relay, channel_id: str, secret: str,
                    enc_key: bytes | None = None, timeout_s: float = 60.0):
     """Consumer generator: yields decrypted token payload dicts in order.
@@ -85,52 +127,47 @@ def consume_tokens(relay: Relay, channel_id: str, secret: str,
 REMOTE_FN_NAME = "hpc_stream_task"
 
 REMOTE_FN_SOURCE = '''
-import base64, json, os
+import base64
 
 def hpc_stream_task(*, messages, model, channel_id, max_tokens=64,
                     relay_url=None, vllm_url=None):
-    """Runs ON the HPC worker. Generates with the local engine (the
-    paper's vLLM-over-localhost call) and forwards each token outbound
-    to the relay. Credentials come from the pre-provisioned worker env,
-    NEVER from task args. Returns the full text (the batch-mode payload
-    used when the relay is unreachable)."""
+    """Runs ON the HPC worker. Submits to the cluster engine's shared
+    continuous batch (ServingEngine.submit — the paper's vLLM-over-
+    localhost call) so N concurrent tasks interleave their decode ticks
+    in one batch. Each token is pushed outbound to the relay straight
+    from the session callback (TokenProducer): no per-session pump
+    thread, no queue hop. Credentials come from the pre-provisioned
+    worker env, NEVER from task args. Returns the full text (the
+    batch-mode payload used when the relay is unreachable). If the relay
+    channel is torn down mid-stream (client gone, channel reaped), the
+    push raises, the broker cancels the session, and its decode slot is
+    reclaimed."""
     secret = WORKER_ENV["RELAY_SECRET"]
     enc_key_b64 = WORKER_ENV.get("RELAY_ENCRYPTION_KEY")
     enc_key = base64.b64decode(enc_key_b64) if enc_key_b64 else None
 
-    engine = ENGINE          # injected: the tier's serving engine
-    relay = RELAY            # injected: reachable relay handle (or None)
-    produce = PRODUCE_TOKENS # injected: repro.core.data_plane.produce_tokens
+    engine = ENGINE            # injected: the tier's serving engine
+    relay = RELAY              # injected: reachable relay handle (or None)
+    Producer = TOKEN_PRODUCER  # injected: repro.core.data_plane.TokenProducer
 
     prompt = "\\n".join(m.get("content", "") for m in messages)
 
     if relay is None:
         # batch fallback: no streaming; the complete response returns
         # through the control plane (TTFT == total time).
-        res = engine.generate(prompt, max_new_tokens=max_tokens)
+        handle = engine.submit(prompt, max_new_tokens=max_tokens)
+        res = handle.result(timeout=600.0)
         return {"text": res.text, "n_tokens": res.n_generated, "streamed": False}
 
-    # stream as generated: engine callback pushes straight to the relay
-    import threading, queue as _q
-    q = _q.Queue()
-    res_box = {}
-    def run():
-        try:
-            r = engine.generate(prompt, max_new_tokens=max_tokens,
-                                on_token=lambda tid, text: q.put((tid, text)))
-            res_box["res"] = r
-        finally:
-            q.put(None)
-    th = threading.Thread(target=run, daemon=True)
-    th.start()
-    def live_iter():
-        while True:
-            item = q.get()
-            if item is None:
-                return
-            yield item
-    n = produce(relay, channel_id, secret, live_iter(), enc_key)
-    th.join()
-    r = res_box.get("res")
-    return {"text": r.text if r else "", "n_tokens": n, "streamed": True}
+    # stream as generated: the broker's on_token callback IS the relay
+    # producer; a failed push cancels the session (slot reclamation)
+    prod = Producer(relay, channel_id, secret, enc_key)
+    handle = engine.submit(prompt, max_new_tokens=max_tokens,
+                           on_token=prod.push)
+    res = handle.result(timeout=600.0)
+    if res.cancelled:
+        prod.fail("relay channel torn down")
+        raise RuntimeError("stream cancelled: relay channel torn down")
+    n = prod.done()
+    return {"text": res.text, "n_tokens": n, "streamed": True}
 '''

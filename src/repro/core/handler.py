@@ -38,7 +38,13 @@ class StreamingHandler:
 
     def handle(self, query: str, history: list | None = None, *,
                override_tier: str | None = None, max_tokens: int = 64,
-               on_token: Optional[Callable[[int, str], None]] = None) -> HandledQuery:
+               on_token: Optional[Callable[[int, str], None]] = None,
+               cancel_event=None) -> HandledQuery:
+        """Run one query through the pipeline. Thread-safe: concurrent
+        handle() calls stream through each tier's session broker and
+        interleave in its decode batch. ``cancel_event`` (a
+        threading.Event) tears the in-flight stream down mid-generation
+        and frees its decode slot."""
         history = list(history or [])
         decision = self.router.route(query, override_tier=override_tier)
         if not decision.chain:
@@ -56,7 +62,8 @@ class StreamingHandler:
                 continue
             try:
                 result = backend.stream(messages, max_tokens=max_tokens,
-                                        on_token=on_token)
+                                        on_token=on_token,
+                                        cancel_event=cancel_event)
             except BackendError as e:
                 last_err = e
                 continue

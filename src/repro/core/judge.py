@@ -18,6 +18,7 @@ from __future__ import annotations
 import enum
 import math
 import re
+import threading
 import time
 
 import numpy as np
@@ -137,12 +138,15 @@ class FeatureJudge:
 
 
 class CachedJudge:
-    """Result cache for repeated queries (paper §2.2)."""
+    """Result cache for repeated queries (paper §2.2). Thread-safe: the
+    judge sits on the concurrent-session path, so cache bookkeeping is
+    locked (the inner judge runs outside the lock)."""
 
     def __init__(self, inner, maxsize: int = 4096):
         self.inner = inner
         self.name = f"cached({inner.name})"
         self._cache: dict[str, Complexity] = {}
+        self._lock = threading.Lock()
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
@@ -150,12 +154,14 @@ class CachedJudge:
     def judge(self, text: str):
         t0 = time.perf_counter()
         key = text.strip().lower()
-        if key in self._cache:
-            self.hits += 1
-            return self._cache[key], time.perf_counter() - t0
-        self.misses += 1
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                return self._cache[key], time.perf_counter() - t0
+            self.misses += 1
         c, _ = self.inner.judge(text)
-        if len(self._cache) >= self.maxsize:
-            self._cache.pop(next(iter(self._cache)))
-        self._cache[key] = c
+        with self._lock:
+            if len(self._cache) >= self.maxsize:
+                self._cache.pop(next(iter(self._cache)))
+            self._cache[key] = c
         return c, time.perf_counter() - t0

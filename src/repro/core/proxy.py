@@ -118,18 +118,25 @@ class HPCAsAPIProxy:
     # ------------------------------------------------------------------
     def _stream_events(self, rid: str, model: str, messages, max_tokens) -> Iterator[str]:
         """Generator of SSE frames; runs the dual-channel flow lazily so the
-        first frame goes out as soon as the first token lands."""
+        first frame goes out as soon as the first token lands.
+
+        Closing the generator (the client disconnected mid-stream) sets
+        the backend's cancel_event: the relay consumer detaches, the
+        producer's next send fails, and the remote session's decode slot
+        is reclaimed — an abandoned stream never decodes to completion."""
         yield sse_event(chat_chunk(rid, model, "", role="assistant"))
         import queue as _q
         import threading
         q: _q.Queue = _q.Queue()
         box: dict = {}
+        cancel_event = threading.Event()
 
         def run():
             try:
                 box["result"] = self.backend.stream(
                     messages, max_tokens=max_tokens,
-                    on_token=lambda tid, text: q.put(text))
+                    on_token=lambda tid, text: q.put(text),
+                    cancel_event=cancel_event)
             except Exception as e:  # surfaced as an SSE error frame
                 box["error"] = str(e)
             finally:
@@ -137,11 +144,15 @@ class HPCAsAPIProxy:
 
         th = threading.Thread(target=run, daemon=True)
         th.start()
-        while True:
-            item = q.get()
-            if item is None:
-                break
-            yield sse_event(chat_chunk(rid, model, item))
+        try:
+            while True:
+                item = q.get()
+                if item is None:
+                    break
+                yield sse_event(chat_chunk(rid, model, item))
+        except GeneratorExit:
+            cancel_event.set()
+            raise
         th.join()
         if "error" in box:
             yield sse_event({"error": {"message": box["error"], "type": "upstream_error"}})

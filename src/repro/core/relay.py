@@ -54,6 +54,8 @@ class _Channel:
     producer_done: bool = False
     consumer_attached: bool = False
     consumer_closed: bool = False
+    consumer_drained: bool = False   # stream completed normally
+    reaped: bool = False
     n_relayed: int = 0
     peak_buffered: int = 0
 
@@ -99,14 +101,23 @@ def _const_eq(a: str, b: str) -> bool:
 
 class ProducerConn(_Conn):
     def send(self, message: dict):
-        """Enqueue one message; blocks on a full buffer (backpressure)."""
+        """Enqueue one message; blocks on a full buffer (backpressure).
+
+        Raises ChannelClosed as soon as the channel is torn down — the
+        consumer disconnected mid-stream or the relay reaped the channel
+        — so the producing session can be cancelled and its decode slot
+        reclaimed instead of streaming into the void."""
         self._require_auth()
         ch = self._chan
         deadline = time.monotonic() + self._relay.send_timeout_s
         with ch.cond:
-            while len(ch.buffer) >= self._relay.buffer_size:
-                if ch.consumer_closed:
+            while True:
+                if ch.reaped:
+                    raise ChannelClosed("channel reaped")
+                if ch.consumer_closed and not ch.consumer_drained:
                     raise ChannelClosed("consumer gone")
+                if len(ch.buffer) < self._relay.buffer_size:
+                    break
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     self._relay.stats["send_timeouts"] += 1
@@ -140,7 +151,11 @@ class ConsumerConn(_Conn):
                     ch.cond.notify_all()
                     return msg
                 if ch.producer_done:
-                    ch.consumer_closed = True  # stream complete == disconnect
+                    # stream complete == disconnect (a NORMAL teardown:
+                    # drained is what distinguishes it from a mid-stream
+                    # disconnect, which makes the producer raise)
+                    ch.consumer_drained = True
+                    ch.consumer_closed = True
                     break
                 remaining = None if deadline is None else deadline - time.monotonic()
                 if remaining is not None and remaining <= 0:
@@ -213,7 +228,12 @@ class Relay:
                 if (not ch.producer_attached or not ch.consumer_attached)
                 and now - ch.created_at > self.reap_timeout_s]
         for cid in dead:
-            self._channels.pop(cid)
+            ch = self._channels.pop(cid)
+            # wake any blocked producer so it sees the teardown and can
+            # cancel its session rather than streaming into the void
+            with ch.cond:
+                ch.reaped = True
+                ch.cond.notify_all()
             self.stats["channels_reaped"] += 1
             self._log("relay", cid, "reaped")
 

@@ -19,7 +19,7 @@ from repro.configs import get_smoke_config
 from repro.core.auth import ApiKeyStore, DualAuthenticator, GlobusAuthService, SlidingWindowRateLimiter
 from repro.core.control_plane import ComputeEndpoint
 from repro.core.crypto import new_key
-from repro.core.data_plane import produce_tokens
+from repro.core.data_plane import TokenProducer, produce_tokens
 from repro.core.handler import StreamingHandler
 from repro.core.judge import CachedJudge, FeatureJudge, KeywordJudge
 from repro.core.metrics import UsageTracker
@@ -52,16 +52,31 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                  hpc_arch: str = "minitron-8b", max_seq: int = 128,
                  summarizer_policies: dict | None = None,
                  hpc_fail: bool = False, cloud_fail: bool = False,
-                 rate_limit: int = 1000) -> StreamSystem:
-    """Everything wired, smoke-scale models (CPU-friendly)."""
+                 rate_limit: int = 1000, scheduler_slots: int = 8,
+                 hpc_workers: int = 8,
+                 hpc_overrides: dict | None = None) -> StreamSystem:
+    """Everything wired, smoke-scale models (CPU-friendly).
+
+    ``scheduler_slots`` sizes each tier engine's session broker (the
+    shared continuous-batching decode batch concurrent sessions
+    interleave in); ``hpc_workers`` sizes the control-plane worker pool
+    so that many dual-channel tasks can be in flight at once — the
+    workers only shepherd relay traffic, the decode work itself is
+    batched on the HPC engine's broker thread."""
     rng = jax.random.PRNGKey(0)
 
     # --- engines (the per-tier model servers) ---
     # vocab >= 259 so the byte tokenizer can round-trip real text
     local_cfg = get_smoke_config(local_arch).replace(vocab_size=384)
     hpc_cfg = get_smoke_config(hpc_arch).replace(vocab_size=384)
-    local_engine = ServingEngine(local_cfg, max_seq=max_seq, rng=rng)
-    hpc_engine = ServingEngine(hpc_cfg, max_seq=max_seq, rng=rng)
+    if hpc_overrides:
+        # e.g. benchmarks scale the HPC model up toward a realistic
+        # compute weight (smoke configs are contention-test sized)
+        hpc_cfg = hpc_cfg.replace(**hpc_overrides)
+    local_engine = ServingEngine(local_cfg, max_seq=max_seq, rng=rng,
+                                 scheduler_slots=scheduler_slots)
+    hpc_engine = ServingEngine(hpc_cfg, max_seq=max_seq, rng=rng,
+                               scheduler_slots=scheduler_slots)
     local_engine.warmup()
     hpc_engine.warmup()
 
@@ -76,9 +91,10 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
         worker_env["RELAY_ENCRYPTION_KEY"] = base64.b64encode(enc_key).decode()
     endpoint = ComputeEndpoint(
         "lakeshore-gpu", worker_init_env=worker_env,
-        dispatch_latency_s=dispatch_latency_s,
+        dispatch_latency_s=dispatch_latency_s, n_workers=hpc_workers,
         extra_globals={"ENGINE": hpc_engine, "RELAY": relay,
-                       "PRODUCE_TOKENS": produce_tokens})
+                       "PRODUCE_TOKENS": produce_tokens,
+                       "TOKEN_PRODUCER": TokenProducer})
     if hpc_fail:
         endpoint.shutdown()
 

@@ -11,8 +11,16 @@
   * CloudBackend — simulated commercial API: configurable TTFT/rate
     latency model + real per-token cost accounting (no network here).
 
-All backends expose stream(messages, max_tokens, on_token) ->
-TierResult and health_check().
+All backends expose stream(messages, max_tokens, on_token,
+cancel_event) -> TierResult and health_check().
+
+Concurrency: every backend streams through the engine's session broker
+(``ServingEngine.submit``) rather than a blocking ``generate`` call, so
+N concurrent ``stream()`` calls — N proxy sessions, N handler threads —
+interleave their decode ticks in one shared continuous batch instead of
+serializing on the engine. ``cancel_event`` (set by the caller, e.g. an
+SSE client disconnect) tears the session down mid-stream and frees its
+decode slot.
 """
 
 from __future__ import annotations
@@ -62,34 +70,53 @@ def _join_messages(messages) -> str:
 
 
 class LocalBackend:
-    """Free, private, on-device (paper: Ollama / Llama 3.2 3B)."""
+    """Free, private, on-device (paper: Ollama / Llama 3.2 3B).
 
-    def __init__(self, spec: TierSpec, engine):
+    Streams through the engine's session broker, so concurrent local
+    queries share one decode batch."""
+
+    def __init__(self, spec: TierSpec, engine, *, timeout_s: float = 120.0):
         self.spec = spec
         self.engine = engine
+        self.timeout_s = timeout_s
 
     def health_check(self) -> bool:
         return True
 
-    def stream(self, messages, *, max_tokens=64, on_token=None) -> TierResult:
+    def stream(self, messages, *, max_tokens=64, on_token=None,
+               cancel_event=None) -> TierResult:
         t0 = time.perf_counter()
         prompt = _join_messages(messages)
         box = {}
+        handle_box = {}
 
         def cb(tid, text):
             if "ttft" not in box:
                 box["ttft"] = time.perf_counter() - t0
+            if cancel_event is not None and cancel_event.is_set():
+                h = handle_box.get("h")
+                if h is not None:
+                    h.cancel()
+                return
             if on_token:
                 on_token(tid, text)
 
-        res = self.engine.generate(prompt, max_new_tokens=max_tokens, on_token=cb)
+        handle = self.engine.submit(prompt, max_new_tokens=max_tokens,
+                                    on_token=cb)
+        handle_box["h"] = handle
+        try:
+            res = handle.result(timeout=self.timeout_s)
+        except TimeoutError as e:
+            handle.cancel()          # don't leak the decode slot
+            raise BackendError(f"local session timed out: {e}") from e
         total = time.perf_counter() - t0
         return TierResult(
             tier=self.spec.name, model=self.spec.model_name, text=res.text,
             n_prompt_tokens=res.n_prompt, n_completion_tokens=res.n_generated,
             ttft_s=box.get("ttft", total), total_s=total,
             tok_per_s=res.n_generated / max(total - box.get("ttft", 0.0), 1e-9),
-            cost_usd=0.0, streamed=True)
+            cost_usd=0.0, streamed=True,
+            error="cancelled" if res.cancelled else None)
 
 
 class HPCBackend:
@@ -110,13 +137,14 @@ class HPCBackend:
         """Lightweight auth check (~100 ms) — NOT a full task round-trip."""
         return self.endpoint.health_check()
 
-    def stream(self, messages, *, max_tokens=64, on_token=None) -> TierResult:
+    def stream(self, messages, *, max_tokens=64, on_token=None,
+               cancel_event=None) -> TierResult:
         if self.relay_enabled and self.relay is not None:
-            return self._stream_relay(messages, max_tokens, on_token)
+            return self._stream_relay(messages, max_tokens, on_token, cancel_event)
         return self._batch_fallback(messages, max_tokens, on_token)
 
     # ---- dual-channel path ----
-    def _stream_relay(self, messages, max_tokens, on_token) -> TierResult:
+    def _stream_relay(self, messages, max_tokens, on_token, cancel_event=None) -> TierResult:
         t0 = time.perf_counter()
         # (1) fresh UUID channel per query
         channel_id = new_channel_id()
@@ -134,6 +162,7 @@ class HPCBackend:
         pieces = []
         ttft = None
         n = 0
+        cancelled = False
         try:
             for payload in consume_tokens(self.relay, channel_id, self._secret,
                                           self._enc_key, timeout_s=self.task_timeout_s):
@@ -143,17 +172,26 @@ class HPCBackend:
                 pieces.append(payload.get("text", ""))
                 if on_token:
                     on_token(payload.get("id", 0), payload.get("text", ""))
-            result = fut.result(timeout=self.task_timeout_s)
+                if cancel_event is not None and cancel_event.is_set():
+                    # breaking out closes the consumer connection (the
+                    # generator's finally); the relay then refuses the
+                    # producer's next send, which cancels the remote
+                    # session and frees its decode slot.
+                    cancelled = True
+                    break
+            if not cancelled:
+                result = fut.result(timeout=self.task_timeout_s)
         except Exception as e:
             raise BackendError(f"dual-channel stream failed: {e}") from e
         total = time.perf_counter() - t0
         ttft = ttft if ttft is not None else total
+        text = "".join(pieces) if cancelled else result.get("text", "".join(pieces))
         return TierResult(
-            tier=self.spec.name, model=self.spec.model_name,
-            text=result.get("text", "".join(pieces)),
+            tier=self.spec.name, model=self.spec.model_name, text=text,
             n_prompt_tokens=sum(len(m.get("content", "")) for m in messages),
             n_completion_tokens=n, ttft_s=ttft, total_s=total,
-            tok_per_s=n / max(total - ttft, 1e-9), cost_usd=0.0, streamed=True)
+            tok_per_s=n / max(total - ttft, 1e-9), cost_usd=0.0, streamed=True,
+            error="cancelled" if cancelled else None)
 
     # ---- batch fallback (relay unavailable; paper §7.2 row 3) ----
     def _batch_fallback(self, messages, max_tokens, on_token) -> TierResult:
@@ -183,42 +221,74 @@ class CloudBackend:
     real cost accounting. The only paid tier."""
 
     def __init__(self, spec: TierSpec, *, ttft_s: float = 0.05,
-                 tok_per_s: float = 400.0, fail: bool = False, engine=None):
+                 tok_per_s: float = 400.0, fail: bool = False, engine=None,
+                 timeout_s: float = 120.0):
         self.spec = spec
         self.ttft_s = ttft_s
         self.tok_per_s = tok_per_s
         self.fail = fail
         self.engine = engine  # optional: real generation for token content
+        self.timeout_s = timeout_s
 
     def health_check(self) -> bool:
         return not self.fail
 
-    def stream(self, messages, *, max_tokens=64, on_token=None) -> TierResult:
+    def stream(self, messages, *, max_tokens=64, on_token=None,
+               cancel_event=None) -> TierResult:
         if self.fail:
             raise BackendError("cloud API unreachable")
         t0 = time.perf_counter()
         prompt = _join_messages(messages)
+        handle = None
         if self.engine is not None:
-            res = self.engine.generate(prompt, max_new_tokens=max_tokens)
-            tokens = [(t, self.engine.tokenizer.decode_token(t)) for t in res.tokens]
+            # real token content rides the shared decode batch; the
+            # latency model below only paces *delivery*, so concurrent
+            # cloud sessions don't serialize on the engine either
+            import queue as _q
+            q: _q.Queue = _q.Queue()
+            handle = self.engine.submit(
+                prompt, max_new_tokens=max_tokens,
+                on_token=lambda tid, text: q.put((tid, text)),
+                on_done=lambda res: q.put(None))
+
+            def _iter(h=handle):
+                while True:
+                    try:
+                        item = q.get(timeout=self.timeout_s)
+                    except _q.Empty:
+                        h.cancel()   # wedged session: free the slot
+                        raise BackendError(
+                            f"cloud session stalled > {self.timeout_s}s")
+                    if item is None:
+                        return
+                    yield item
+
+            token_iter = _iter()
         else:
-            words = (f"cloud-token-{i} " for i in range(max_tokens))
-            tokens = [(i, w) for i, w in enumerate(words)]
+            token_iter = ((i, f"cloud-token-{i} ") for i in range(max_tokens))
         time.sleep(self.ttft_s)
         ttft = time.perf_counter() - t0
         out = []
-        for tid, text in tokens:
+        n_comp = 0
+        cancelled = False
+        for tid, text in token_iter:
+            if cancel_event is not None and cancel_event.is_set():
+                if handle is not None:
+                    handle.cancel()
+                cancelled = True
+                break
             out.append(text)
+            n_comp += 1
             if on_token:
                 on_token(tid, text)
             time.sleep(1.0 / self.tok_per_s)
         total = time.perf_counter() - t0
         n_prompt = len(prompt.encode()) + 1
-        n_comp = len(tokens)
         cost = (n_prompt * self.spec.cost_per_1k_prompt
                 + n_comp * self.spec.cost_per_1k_completion) / 1000.0
         return TierResult(
             tier=self.spec.name, model=self.spec.model_name, text="".join(out),
             n_prompt_tokens=n_prompt, n_completion_tokens=n_comp,
             ttft_s=ttft, total_s=total, tok_per_s=n_comp / max(total - ttft, 1e-9),
-            cost_usd=cost, streamed=True)
+            cost_usd=cost, streamed=True,
+            error="cancelled" if cancelled else None)

@@ -21,7 +21,7 @@ import threading
 from typing import Any, Mapping, Sequence
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import AbstractMesh, Mesh, NamedSharding, PartitionSpec as P
 
 # Logical axis name -> mesh axis name(s). Values may be a string, a tuple of
 # strings (sharded over the product of those axes), or None (replicated).
@@ -74,8 +74,65 @@ def current_rules() -> AxisRules | None:
     return _STATE.rules
 
 
+def get_abstract_mesh():
+    """The abstract mesh active for the current trace, or None.
+
+    ``get_abstract_mesh`` has moved between JAX releases (public
+    ``jax.sharding`` attribute in some, ``jax._src.mesh`` only in
+    others, absent in the oldest). Resolve it wherever this JAX exposes
+    it; callers fall back to the physical mesh context when it yields
+    nothing."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        try:
+            from jax._src import mesh as _mesh_impl
+            fn = getattr(_mesh_impl, "get_abstract_mesh", None)
+        except ImportError:
+            fn = None
+    if fn is None:
+        return None
+    try:
+        return fn()
+    except Exception:
+        return None
+
+
+def make_abstract_mesh(axis_sizes: Sequence[int],
+                       axis_names: Sequence[str]) -> AbstractMesh:
+    """Build an AbstractMesh across JAX signature drift.
+
+    Current JAX takes a single ``((name, size), ...)`` shape tuple;
+    older/newer releases take ``(axis_sizes, axis_names)`` positionally.
+    Both call sites (tests, launch analysis) share this helper instead of
+    pinning one signature."""
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """shard_map across API drift, with replication checking off (the MoE
+    dispatch psums partial results itself): newer releases expose
+    ``jax.shard_map(..., check_vma=...)``, older ones
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)``."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        try:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as _shard_map
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def _active_mesh() -> Mesh | None:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is not None and not mesh.empty:
         return mesh
     # fall back to the physical mesh context if set

@@ -120,14 +120,22 @@ def _parse_computation(comp: Computation):
             if out and ops:
                 out_elems = _shape_elems(out.group(2))
                 contraction = 1
-                opnames = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-                if lhs_c is not None and opnames:
-                    lhs_shape = comp.shapes.get(opnames[0])
-                    if lhs_shape:
-                        dims = lhs_shape[1].split(",") if lhs_shape[1] else []
-                        for ci in lhs_c.group(1).split(","):
-                            if ci != "" and int(ci) < len(dims):
-                                contraction *= int(dims[int(ci)])
+                # operands carry inline typed shapes in newer XLA text
+                # ("dot(f32[64,128]{1,0} %a, ...)"), bare (possibly
+                # %-less) names in older; prefer the inline shape, fall
+                # back to the shape map.
+                operands = re.findall(
+                    r"(?:([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+)?%?([\w\.\-]+)",
+                    ops.group(1))
+                if lhs_c is not None and operands:
+                    _, dims_s, opname = operands[0]
+                    if not dims_s:
+                        lhs_shape = comp.shapes.get(opname)
+                        dims_s = lhs_shape[1] if lhs_shape else ""
+                    dims = dims_s.split(",") if dims_s else []
+                    for ci in lhs_c.group(1).split(","):
+                        if ci != "" and int(ci) < len(dims):
+                            contraction *= int(dims[int(ci)])
                 comp.dot_flops += 2.0 * out_elems * contraction
         # ---- collectives ----
         for kind in COLL_KINDS:
@@ -147,8 +155,12 @@ def _parse_computation(comp: Computation):
         if " while(" in rest or rest.startswith("while("):
             bm = re.search(r"body=%?([\w\.\-]+)", rest)
             cm = re.search(r"condition=%?([\w\.\-]+)", rest)
+            # XLA's simplifier records the resolved trip count on the
+            # while op itself; prefer it over the condition-constant scan
+            tm = re.search(r'"known_trip_count":\s*\{"n":\s*"(\d+)"\}', rest)
             if bm:
-                comp.calls.append(("body", bm.group(1), cm.group(1) if cm else None))
+                trip = int(tm.group(1)) if tm else (cm.group(1) if cm else None)
+                comp.calls.append(("body", bm.group(1), trip))
             if cm:
                 comp.calls.append(("condition", cm.group(1), None))
         for cm in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", rest):
@@ -188,7 +200,10 @@ def analyze_hlo(hlo: str) -> dict:
         mult[name] = mult.get(name, 0.0) + m
         for kind, callee, cond in comp.calls:
             if kind == "body":
-                trips = _trip_count(comps, cond) if cond else 1
+                if isinstance(cond, int):
+                    trips = cond
+                else:
+                    trips = _trip_count(comps, cond) if cond else 1
                 visit(callee, m * trips)
             else:
                 visit(callee, m)

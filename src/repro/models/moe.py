@@ -77,7 +77,8 @@ def moe_mlp_shard_map(x, p, cfg: ModelConfig, *, capacity_factor: float):
     what GSPMD does for dense layers, minus the pathological scatter
     resharding (measured: 72s -> see EXPERIMENTS.md)."""
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.sharding import _active_mesh, logical_to_pspec
+    from repro.distributed.sharding import (_active_mesh, logical_to_pspec,
+                                            shard_map_compat)
 
     mesh = _active_mesh()
     B, S, D = x.shape
@@ -143,7 +144,7 @@ def moe_mlp_shard_map(x, p, cfg: ModelConfig, *, capacity_factor: float):
         return logical_to_pspec(logical, shape, mesh)
 
     bspec = spec_of(("batch", None, None), x.shape)
-    out = jax.shard_map(
+    out = shard_map_compat(
         local, mesh=mesh,
         in_specs=(bspec,
                   spec_of(("embed", None), p["router"].shape),
@@ -151,7 +152,6 @@ def moe_mlp_shard_map(x, p, cfg: ModelConfig, *, capacity_factor: float):
                   spec_of(("experts", "embed", "expert_ffn"), p["w3"].shape),
                   spec_of(("experts", "expert_ffn", "embed"), p["w2"].shape)),
         out_specs=bspec,
-        check_vma=False,
     )(x, p["router"], p["w1"], p["w3"], p["w2"])
     if cfg.n_shared_experts:
         out = out + layers.mlp(x, p["shared"], cfg)

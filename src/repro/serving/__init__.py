@@ -1,6 +1,8 @@
 from repro.serving.engine import ServingEngine, GenerationResult
 from repro.serving.tokenizer import ByteTokenizer
 from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.broker import SessionBroker, SessionHandle, SessionResult
 
 __all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
-           "ContinuousBatcher", "Request"]
+           "ContinuousBatcher", "Request",
+           "SessionBroker", "SessionHandle", "SessionResult"]

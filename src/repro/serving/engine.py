@@ -9,7 +9,9 @@ both run through this engine; only the delivery path differs.
 
 from __future__ import annotations
 
+import threading
 import time
+import uuid
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -20,6 +22,7 @@ import numpy as np
 from repro.models import build_model
 from repro.models.common import ModelConfig
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import clip_prompt
 from repro.serving.tokenizer import ByteTokenizer
 
 
@@ -36,7 +39,8 @@ class GenerationResult:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, params=None, rng=None,
-                 max_seq: int = 256, sampler: SamplerConfig | None = None):
+                 max_seq: int = 256, sampler: SamplerConfig | None = None,
+                 scheduler_slots: int = 4, prefill_chunk: int = 32):
         self.cfg = cfg
         self.model = build_model(cfg)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -50,6 +54,75 @@ class ServingEngine:
         self._decode = jax.jit(self.model.decode_step)
         self._warm = False
 
+        # concurrent-session broker (lazily started on first submit());
+        # use_scheduler=False restores the legacy one-generate-at-a-time
+        # behaviour — the serial baseline benchmarks/concurrency.py
+        # compares against.
+        self.scheduler_slots = scheduler_slots
+        self.prefill_chunk = prefill_chunk
+        self.use_scheduler = True
+        self._broker = None
+        self._broker_lock = threading.Lock()
+        self._serial_lock = threading.Lock()
+
+    @property
+    def scheduler(self):
+        """The engine's SessionBroker, or None if never started."""
+        return self._broker
+
+    def _get_broker(self):
+        with self._broker_lock:
+            if self._broker is None:
+                from repro.serving.broker import SessionBroker
+                self._broker = SessionBroker(self, slots=self.scheduler_slots,
+                                             prefill_chunk=self.prefill_chunk)
+            return self._broker
+
+    def shutdown(self):
+        with self._broker_lock:
+            if self._broker is not None:
+                self._broker.shutdown()
+                self._broker = None
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, *, max_new_tokens: int = 32,
+               on_token: Optional[Callable[[int, str], None]] = None,
+               on_done=None, deadline_s: float = 0.0, rid: str | None = None):
+        """Thread-safe streaming submission: enqueue one session and
+        return a :class:`repro.serving.broker.SessionHandle` immediately.
+        Concurrent sessions interleave in the broker's shared decode
+        batch; every tier backend streams through here instead of
+        serial ``generate`` calls."""
+        if self.use_scheduler:
+            return self._get_broker().submit(
+                prompt, max_new_tokens=max_new_tokens, on_token=on_token,
+                on_done=on_done, deadline_s=deadline_s, rid=rid)
+        # legacy serial path: one blocking generate at a time, callers
+        # queue on the engine lock (TTFT includes the queue wait)
+        from repro.serving.broker import SessionHandle, SessionResult
+        handle = SessionHandle(rid or uuid.uuid4().hex[:12], lambda: None)
+
+        def cb(tid, text):
+            if handle.ttft_s is None:
+                handle.ttft_s = time.perf_counter() - handle.submitted_at
+            if on_token:
+                on_token(tid, text)
+
+        with self._serial_lock:
+            res = self.generate(prompt, max_new_tokens=max_new_tokens,
+                                on_token=cb)
+        total = time.perf_counter() - handle.submitted_at
+        ttft = handle.ttft_s if handle.ttft_s is not None else total
+        sr = SessionResult(tokens=res.tokens, text=res.text, ttft_s=ttft,
+                           total_s=total,
+                           tok_per_s=res.n_generated / max(total - ttft, 1e-9),
+                           n_prompt=res.n_prompt, n_generated=res.n_generated)
+        handle._result = sr
+        handle._event.set()
+        if on_done:
+            on_done(sr)
+        return handle
+
     def _bucket(self, n: int) -> int:
         """Prompts are left-padded to power-of-two buckets so prefill
         compiles once per bucket, not once per prompt length."""
@@ -60,10 +133,12 @@ class ServingEngine:
 
     def warmup(self, batch: int = 1, buckets=(16, 32, 64)):
         """Compile prefill (per bucket) + decode so benchmarks measure
-        steady state, not XLA compilation."""
-        for b in buckets:
-            if b >= self.max_seq:
-                continue
+        steady state, not XLA compilation. Buckets at or beyond max_seq
+        are clamped to max_seq-1 so at least one shape always compiles
+        (a tiny max_seq used to leave `last`/`cache` unbound)."""
+        usable = sorted({min(b, max(self.max_seq - 1, 1)) for b in buckets})
+        last = cache = None
+        for b in usable:
             toks = jnp.zeros((batch, b), jnp.int32)
             cache = self.model.init_cache(batch, self.max_seq)
             last, cache = self._prefill(self.params, toks, cache)
@@ -82,7 +157,7 @@ class ServingEngine:
             ids = self.tokenizer.encode(prompt)
         else:
             ids = list(prompt)
-        ids = ids[: self.max_seq - max_new_tokens - 1]
+        ids, max_new_tokens = clip_prompt(ids, max_new_tokens, self.max_seq)
         bucket = self._bucket(len(ids))
         ids_p = [self.tokenizer.pad_id] * (bucket - len(ids)) + ids  # left-pad
         toks = jnp.asarray([ids_p], jnp.int32)
@@ -121,6 +196,8 @@ class ServingEngine:
         B = len(prompts)
         enc = [self.tokenizer.encode(p) for p in prompts]
         L = self._bucket(max(len(e) for e in enc))
+        # decode writes L..L+max_new-2: keep them inside the seq axis
+        max_new_tokens = max(min(max_new_tokens, self.max_seq + 1 - L), 1)
         toks = np.full((B, L), self.tokenizer.pad_id, np.int32)
         for i, e in enumerate(enc):
             toks[i, L - len(e):] = e  # left-pad so last position is real

@@ -3,9 +3,10 @@
 Fixed decode batch of B slots over one shared KV cache. One scheduler
 tick is ONE fused, jitted device step: decode + sampling + per-slot
 EOS/length masking all run on device, and the host reads back a single
-packed (B, 4) int32 array per tick — at most one host<->device token
+packed (B, 3) int32 array per tick — at most one host<->device token
 transfer regardless of slot count (the seed read every slot's token
-individually).
+individually). An admission additionally reads its prefill token as one
+scalar at admission time, so TTFT never waits for the next full tick.
 
 Admissions use **chunked prefill**: a new request's prompt is split into
 fixed-size chunks (``prefill_chunk``) processed one per tick between
@@ -39,6 +40,36 @@ from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.tokenizer import ByteTokenizer
 
 
+def clip_prompt(ids, max_new_tokens: int, max_seq: int) -> tuple:
+    """The one capacity rule: prefill occupies the whole power-of-two
+    BUCKET the prompt is left-padded to (not just the raw prompt), and
+    decode writes ``max_new_tokens - 1`` more positions (the first token
+    comes from the prefill logits), so the invariant is
+
+        bucket(len(ids)) + max_new_tokens <= max_seq + 1
+
+    — budgeting against the raw length let decode positions run past the
+    seq axis, where dynamic_update_slice silently clamps onto the last
+    position and corrupts the KV cache. Returns ``(ids, max_new_tokens)``
+    with the prompt clipped to the next bucket down and/or the budget
+    clamped when the prompt cannot shrink further. Shared by generate(),
+    the batcher admission path, and the broker's accounting."""
+    ids = list(ids)
+
+    def bucket(n):
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, max_seq - 1)
+
+    min_bucket = min(16, max(max_seq - 1, 1))
+    max_new = max(min(max_new_tokens, max_seq + 1 - min_bucket), 1)
+    keep = min(len(ids), max(max_seq - max_new - 1, 1))
+    while bucket(keep) + max_new > max_seq + 1 and keep > 1:
+        keep = bucket(keep) // 2     # drop to the next smaller bucket
+    return ids[:keep], max_new
+
+
 @dataclass
 class Request:
     rid: str
@@ -51,6 +82,7 @@ class Request:
     output_ids: list = field(default_factory=list)
     done: bool = False
     cancelled: bool = False
+    error: Optional[str] = None      # set when a scheduler fault ended it
 
 
 @dataclass
@@ -87,7 +119,6 @@ class ContinuousBatcher:
         # host mirror of the device-side per-slot state (passed into the
         # fused step each tick; tiny int/bool vectors, not token traffic)
         self._active_m = np.zeros(self.B, bool)
-        self._fresh = np.zeros(self.B, bool)
         self._gen = np.zeros(self.B, np.int32)
         self._maxgen = np.full(self.B, 1, np.int32)
 
@@ -95,26 +126,25 @@ class ContinuousBatcher:
         self._fused = jax.jit(self._make_fused())
         self._first = jax.jit(self._make_first())
         self._splice_fns: dict[int, Callable] = {}
-        self.transfers = 0           # device->host syncs; one per decode tick
+        self.transfers = 0           # packed reads; one per decode tick
+        self.adm_transfers = 0       # scalar first-token reads; one per admission
 
     # ------------------------------------------------------------ jitted fns
     def _make_fused(self):
         """One tick: decode all slots, sample, mask EOS/length per slot.
 
         Inputs beyond params/tok/cache are the per-slot state vectors:
-        active, fresh (admitted since last tick), gen (tokens produced,
-        incl. the prefill token), max_gen. Returns the next tok buffer,
-        the cache, and a packed (B, 4) int32 [first_echo, next, emitted,
-        done] — the tick's single token transfer.
+        active, gen (tokens produced, incl. the prefill token), max_gen.
+        Returns the next tok buffer, the cache, and a packed (B, 3)
+        int32 [next, emitted, done] — the tick's single token transfer.
+        (An admission's prefill token is emitted at admission time; see
+        _advance_admissions.)
         """
         model, sampler = self.model, self.engine.sampler
         eos, pad = self.tokenizer.eos_id, self.tokenizer.pad_id
 
-        def fused(params, tok, cache, active, fresh, gen, max_gen, rng):
-            # freshly-admitted slots whose *prefill* token already ended
-            # the request (EOS, or max_new_tokens == 1) skip emission
-            done_pre = active & fresh & ((tok[:, 0] == eos) | (gen >= max_gen))
-            run = active & ~done_pre
+        def fused(params, tok, cache, active, gen, max_gen, rng):
+            run = active
             logits, cache = model.decode_step(params, tok, cache)
             nxt = sample(logits, rng, sampler)
             nxt = jnp.where(run, nxt, pad).astype(jnp.int32)
@@ -125,8 +155,8 @@ class ContinuousBatcher:
             # cache writes can never run off the end of the seq axis
             cache["pos"] = jnp.where(alive, cache["pos"], 0)
             packed = jnp.stack(
-                [tok[:, 0], nxt, run.astype(jnp.int32),
-                 (done_pre | done_now).astype(jnp.int32)], axis=1)
+                [nxt, run.astype(jnp.int32), done_now.astype(jnp.int32)],
+                axis=1)
             return nxt[:, None], cache, packed
 
         return fused
@@ -182,6 +212,30 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def cancel(self, req: Request) -> bool:
+        """Cancel one request wherever it currently lives: waiting in the
+        queue, mid-chunked-prefill, or active in a decode slot (the slot
+        is freed and re-admits the next queued request on the next tick).
+        Fires ``on_done`` with ``cancelled=True``. Returns False if the
+        request already finished. NOT thread-safe against a concurrent
+        ``step()`` — callers serialize (see repro.serving.broker)."""
+        if req.done:
+            return False
+        if req in self.queue:
+            self.queue.remove(req)
+        elif self._adm is not None and self._adm.req is req:
+            self._adm = None
+        else:
+            for slot, r in enumerate(self.active):
+                if r is req:
+                    self._finish(slot, cancelled=True)
+                    return True
+            return False
+        req.done, req.cancelled = True, True
+        if req.on_done:
+            req.on_done(req)
+        return True
+
     def _advance_admissions(self):
         """Start or advance the in-flight admission by ONE prefill chunk.
         Called at tick start and again after reaping, so a slot freed by
@@ -192,13 +246,34 @@ class ContinuousBatcher:
             slot = next((s for s in range(self.B) if self.active[s] is None), None)
             if slot is None:
                 return
-            req = self.queue.pop(0)
-            ids = list(req.prompt_ids)[: self.max_seq - req.max_new_tokens - 1]
+            # expire deadlined requests at the pop — don't burn a full
+            # prefill + splice (and emit a stale token) for a session
+            # whose client already timed out waiting in the queue
+            now = time.perf_counter()
+            req = None
+            while self.queue:
+                cand = self.queue.pop(0)
+                if cand.deadline_s and (now - cand.submitted_at) > cand.deadline_s:
+                    cand.done, cand.cancelled = True, True
+                    if cand.on_done:
+                        cand.on_done(cand)
+                    continue
+                req = cand
+                break
+            if req is None:
+                return
+            ids, req.max_new_tokens = clip_prompt(
+                req.prompt_ids, req.max_new_tokens, self.max_seq)
             # left-pad to the same power-of-two bucket single-request
-            # generation uses (numerical parity), then chunk it
+            # generation uses (numerical parity), then chunk it; chunking
+            # only exists to protect in-flight decodes, so an idle batch
+            # admits in ONE bucket-sized chunk (TTFT: fewer dispatches)
             b = self.engine._bucket(len(ids))
             ids = [self.tokenizer.pad_id] * (b - len(ids)) + ids
-            size = min(self.prefill_chunk, b)
+            if not any(r is not None for r in self.active):
+                size = b
+            else:
+                size = min(self.prefill_chunk, b)
             if b % size:             # bucket capped at max_seq-1: one chunk
                 size = b
             one = self.model.init_cache(1, self.max_seq)
@@ -211,20 +286,33 @@ class ContinuousBatcher:
         adm.i += 1
         if adm.i < len(adm.chunks):
             return
-        # prefill complete: paged splice + device-side first token
+        # prefill complete. Sample + emit the prefill token FIRST — one
+        # scalar read per ADMISSION (not per slot per tick) — and only
+        # then pay for the paged splice: the first decode tick needs the
+        # spliced cache, the first emission does not, so TTFT excludes
+        # both the splice and a full fused tick.
         slot, req = adm.slot, adm.req
+        slot_arr = jnp.asarray(slot, jnp.int32)
+        self.engine.rng, k = jax.random.split(self.engine.rng)
+        self.tok = self._first(self.tok, logits, slot_arr, k)
+        self._adm = None
+        first = int(self.tok[slot, 0])
+        self.adm_transfers += 1
+        req.output_ids.append(first)
+        if req.on_token:
+            req.on_token(first, self.tokenizer.decode_token(first))
+        if first == self.tokenizer.eos_id or req.max_new_tokens <= 1:
+            req.done = True          # ended on its prefill token
+            if req.on_done:
+                req.on_done(req)
+            return
         used = min(round_up(sum(len(c) for c in adm.chunks), self.page),
                    self.max_seq)
-        self.cache = self._get_splice(used)(self.cache, adm.cache,
-                                            jnp.asarray(slot, jnp.int32))
-        self.engine.rng, k = jax.random.split(self.engine.rng)
-        self.tok = self._first(self.tok, logits, jnp.asarray(slot, jnp.int32), k)
+        self.cache = self._get_splice(used)(self.cache, adm.cache, slot_arr)
         self.active[slot] = req
         self._active_m[slot] = True
-        self._fresh[slot] = True
         self._gen[slot] = 1          # the prefill token counts
         self._maxgen[slot] = req.max_new_tokens
-        self._adm = None
 
     # ------------------------------------------------------------ tick
     def _finish(self, slot: int, cancelled=False):
@@ -247,25 +335,30 @@ class ContinuousBatcher:
         re-admit. Returns the number of requests still in flight (active
         slots plus a mid-prefill admission), so callers may loop on it."""
         self._freed = False
+        idle = not any(r is not None for r in self.active)
         self._advance_admissions()
+        if idle:
+            # cold-start burst: with no in-flight decodes, one-chunk-per-
+            # tick pacing protects nothing — run prefills to completion
+            # until the free slots are filled (or the queue drains), so N
+            # simultaneous arrivals don't serialize their admissions
+            # across N*chunks ticks before the batch even starts.
+            while (self._adm is not None
+                   or (self.queue and any(r is None for r in self.active))):
+                self._advance_admissions()
         if not any(r is not None for r in self.active):
             return self._in_flight()
         self.engine.rng, k = jax.random.split(self.engine.rng)
         self.tok, self.cache, packed = self._fused(
             self.engine.params, self.tok, self.cache,
-            self._active_m, self._fresh, self._gen, self._maxgen, k)
+            self._active_m, self._gen, self._maxgen, k)
         packed = np.asarray(packed)  # the tick's one token transfer
         self.transfers += 1
         now = time.perf_counter()
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            first, nxt, emitted, done = (int(v) for v in packed[slot])
-            if self._fresh[slot]:    # prefill token, deferred one tick
-                req.output_ids.append(first)
-                if req.on_token:
-                    req.on_token(first, self.tokenizer.decode_token(first))
-                self._fresh[slot] = False
+            nxt, emitted, done = (int(v) for v in packed[slot])
             if emitted:
                 req.output_ids.append(nxt)
                 self._gen[slot] += 1

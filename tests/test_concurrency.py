@@ -1,0 +1,189 @@
+"""Concurrent multi-session middleware: the thread-safe
+ServingEngine.submit API (session broker over the continuous batcher),
+per-session cancellation down to slot reclamation, and the relay
+channel-teardown -> cancel path the HPC remote function relies on."""
+
+import queue
+import threading
+import time
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.data_plane import produce_tokens
+from repro.core.relay import ChannelClosed, Relay, new_channel_id
+from repro.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96, scheduler_slots=4)
+    e.warmup()
+    return e
+
+
+def _wait_slots_free(engine, timeout=5.0):
+    deadline = time.perf_counter() + timeout
+    broker = engine.scheduler
+    while time.perf_counter() < deadline:
+        if broker is None or all(r is None for r in broker.batcher.active):
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def test_interleaved_sessions_match_serial_generate(engine):
+    """N concurrent submit() sessions decode in one shared batch yet
+    produce exactly the tokens of N serial generate() calls (greedy)."""
+    prompts = [f"concurrency check prompt {i}" for i in range(5)]
+    serial = [engine.generate(p, max_new_tokens=6).tokens for p in prompts]
+
+    handles = {}
+    barrier = threading.Barrier(len(prompts))
+
+    def submit_one(i):
+        barrier.wait()
+        handles[i] = engine.submit(prompts[i], max_new_tokens=6)
+
+    threads = [threading.Thread(target=submit_one, args=(i,))
+               for i in range(len(prompts))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    results = [handles[i].result(timeout=60) for i in range(len(prompts))]
+    assert [r.tokens for r in results] == serial
+    assert all(not r.cancelled for r in results)
+
+
+def test_submit_streams_tokens_with_ttft(engine):
+    seen = []
+    h = engine.submit("hello streaming", max_new_tokens=8,
+                      on_token=lambda t, s: seen.append(t))
+    r = h.result(timeout=60)
+    assert seen == r.tokens
+    assert 0 < r.ttft_s <= r.total_s
+    assert 1 <= r.n_generated <= 8
+
+
+def test_cancel_queued_session(engine):
+    """A session cancelled while still queued (all slots busy) completes
+    immediately with cancelled=True and never occupies a slot."""
+    long_handles = [engine.submit(f"occupy slot {i}", max_new_tokens=48)
+                    for i in range(4)]
+    victim = engine.submit("never scheduled", max_new_tokens=48)
+    victim.cancel()
+    r = victim.result(timeout=5)
+    assert r.cancelled and r.n_generated == 0
+    for h in long_handles:
+        assert not h.result(timeout=60).cancelled
+    assert _wait_slots_free(engine)
+
+
+def test_cancel_active_session_frees_slot(engine):
+    """Cancelling an in-flight session frees its decode slot; the next
+    session reuses it and runs to completion."""
+    got_token = threading.Event()
+    h = engine.submit("cancel me mid decode", max_new_tokens=64,
+                      on_token=lambda t, s: got_token.set())
+    assert got_token.wait(30)
+    h.cancel()
+    r = h.result(timeout=30)
+    assert r.cancelled
+    assert r.n_generated < 64
+    assert _wait_slots_free(engine)
+    r2 = engine.submit("slot is free again", max_new_tokens=4).result(timeout=60)
+    assert not r2.cancelled and r2.n_generated == 4
+
+
+def test_broken_callback_does_not_stall_other_sessions(engine):
+    """One consumer raising in on_token must not take down the shared
+    batch: its session is cancelled, the others stream to completion."""
+    def bad_cb(t, s):
+        raise RuntimeError("consumer went away")
+
+    bad = engine.submit("bad consumer", max_new_tokens=32, on_token=bad_cb)
+    good = engine.submit("good consumer", max_new_tokens=6)
+    rb = bad.result(timeout=30)
+    rg = good.result(timeout=60)
+    assert rb.cancelled and rb.error == "callback error"
+    assert not rg.cancelled and rg.n_generated == 6
+    assert _wait_slots_free(engine)
+
+
+def test_relay_teardown_cancels_session_and_frees_slot(engine):
+    """The HPC remote-fn contract: tokens stream session->queue->relay;
+    when the consumer disconnects mid-stream the producer's next send
+    raises ChannelClosed, the session is cancelled, and its decode slot
+    is reclaimed."""
+    secret = "teardown-secret"
+    relay = Relay(secret)
+    ch = new_channel_id()
+    q: queue.Queue = queue.Queue()
+    handle = engine.submit("stream across the relay", max_new_tokens=64,
+                           on_token=lambda t, s: q.put((t, s)),
+                           on_done=lambda res: q.put(None))
+
+    def live_iter():
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            yield item
+
+    err = {}
+
+    def producer_run():
+        try:
+            produce_tokens(relay, ch, secret, live_iter())
+        except Exception as e:
+            err["e"] = e
+            handle.cancel()
+
+    th = threading.Thread(target=producer_run, daemon=True)
+    th.start()
+    cons = relay.connect_consumer(ch).authenticate(secret)
+    first = cons.recv(timeout=30)
+    assert first is not None and first.get("t") == "token"
+    cons.close()                       # client disconnects mid-stream
+    th.join(timeout=30)
+    assert isinstance(err.get("e"), ChannelClosed)
+    r = handle.result(timeout=30)
+    assert r.cancelled
+    assert _wait_slots_free(engine)
+
+
+def test_scheduler_fault_fails_sessions_not_thread(engine):
+    """A device/scheduler error inside a tick must complete the live
+    sessions (cancelled, with the error recorded) instead of killing the
+    scheduler thread and hanging every caller; the broker keeps serving
+    new submits afterwards."""
+    broker = engine._get_broker()
+    orig_step = broker.batcher.step
+
+    def boom():
+        broker.batcher.step = orig_step      # fail exactly one tick
+        raise RuntimeError("injected device fault")
+
+    broker.batcher.step = boom
+    try:
+        h = engine.submit("doomed by fault", max_new_tokens=8)
+        r = h.result(timeout=10)
+    finally:
+        broker.batcher.step = orig_step
+    assert r.cancelled and "injected device fault" in (r.error or "")
+    r2 = engine.submit("recovered", max_new_tokens=4).result(timeout=60)
+    assert not r2.cancelled and r2.n_generated == 4
+
+
+def test_serial_fallback_mode_matches(engine):
+    """use_scheduler=False restores the legacy one-generate-at-a-time
+    path (the benchmark baseline) with identical greedy tokens."""
+    want = engine.generate("serial fallback", max_new_tokens=5).tokens
+    engine.use_scheduler = False
+    try:
+        r = engine.submit("serial fallback", max_new_tokens=5).result(timeout=60)
+    finally:
+        engine.use_scheduler = True
+    assert r.tokens == want and not r.cancelled

@@ -1,0 +1,113 @@
+"""Property sweeps (hypothesis) over the Pallas kernels vs the pure-jnp
+oracle, in interpret mode — the kernels target TPU; interpret executes
+the same kernel body on CPU. Deterministic single-case kernel tests live
+in test_kernels.py and need no optional deps; this module skips cleanly
+where hypothesis isn't installed (it IS in CI's deps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="kernel property sweeps need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.awq_matmul import awq_matmul
+from repro.kernels.ssm_scan import ssd
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def randn(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------- flash
+@settings(**SETTINGS)
+@given(B=st.sampled_from([1, 2]), G=st.sampled_from([1, 2, 4]),
+       Hkv=st.sampled_from([1, 2]), S=st.sampled_from([128, 256]),
+       D=st.sampled_from([32, 64]), causal=st.booleans(),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_flash_attention_sweep(B, G, Hkv, S, D, causal, dtype):
+    rng = np.random.default_rng(B * 1000 + S + D)
+    dt = jnp.dtype(dtype)
+    q = randn(rng, (B, Hkv * G, S, D), dt)
+    k = randn(rng, (B, Hkv, S, D), dt)
+    v = randn(rng, (B, Hkv, S, D), dt)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=64, block_k=64)
+    exp = ref.mha(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == "bfloat16" else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------- decode
+@settings(**SETTINGS)
+@given(B=st.sampled_from([1, 2]), G=st.sampled_from([1, 4]),
+       Hkv=st.sampled_from([1, 2]), S=st.sampled_from([256, 512]),
+       D=st.sampled_from([32, 64]))
+def test_decode_attention_sweep(B, G, Hkv, S, D):
+    rng = np.random.default_rng(B * 100 + S)
+    q = randn(rng, (B, Hkv * G, 1, D))
+    k = randn(rng, (B, Hkv, S, D))
+    v = randn(rng, (B, Hkv, S, D))
+    kv_len = jnp.asarray(rng.integers(1, S, size=(B,)), jnp.int32)
+    out = decode_attention(q, k, v, kv_len=kv_len, interpret=True, block_k=128)
+    exp = ref.decode_attention(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([1, 7, 64, 300]), D=st.sampled_from([64, 128, 512]),
+       gemma=st.booleans(), dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_rmsnorm_sweep(rows, D, gemma, dtype):
+    rng = np.random.default_rng(rows + D)
+    dt = jnp.dtype(dtype)
+    x = randn(rng, (rows, D), dt)
+    w = randn(rng, (D,), dt)
+    out = rmsnorm(x, w, gemma_style=gemma, interpret=True, block_rows=64)
+    exp = ref.rmsnorm(x, w, gemma_style=gemma)
+    tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------- awq
+@settings(**SETTINGS)
+@given(M=st.sampled_from([1, 16, 100]), K=st.sampled_from([256, 512]),
+       N=st.sampled_from([128, 256]))
+def test_awq_matmul_sweep(M, K, N):
+    rng = np.random.default_rng(M + K + N)
+    w_int = rng.integers(0, 16, size=(K, N))
+    qw = ref.awq_pack(w_int)
+    scales = jnp.asarray(rng.uniform(0.01, 0.05, size=(K // 128, N)), jnp.float32)
+    zeros = jnp.asarray(rng.integers(0, 16, size=(K // 128, N)).astype(np.float32))
+    x = randn(rng, (M, K))
+    out = awq_matmul(x, qw, scales, zeros, interpret=True)
+    exp = ref.awq_matmul(x, qw, scales, zeros)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- ssd
+@settings(**SETTINGS)
+@given(b=st.sampled_from([1, 2]), T=st.sampled_from([64, 128]),
+       H=st.sampled_from([1, 3]), P=st.sampled_from([8, 16]),
+       N=st.sampled_from([8, 16]), chunk=st.sampled_from([16, 32]))
+def test_ssd_sweep(b, T, H, P, N, chunk):
+    rng = np.random.default_rng(T + H + P)
+    x = randn(rng, (b, T, H, P))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, T, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    B = randn(rng, (b, T, N))
+    C = randn(rng, (b, T, N))
+    D = randn(rng, (H,))
+    y_k, h_k = ssd(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    y_r, h_r = ref.ssd(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-3, rtol=1e-3)

@@ -25,6 +25,16 @@ def test_tokenizer_roundtrip():
     assert tk.decode(ids) == "Hello, wörld!"
 
 
+def test_warmup_with_tiny_max_seq():
+    """Every bucket >= max_seq used to leave warmup's locals unbound
+    (UnboundLocalError); it must clamp and still compile one shape."""
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=16)
+    e.warmup()
+    r = e.generate("hi", max_new_tokens=2)
+    assert len(r.tokens) >= 1
+
+
 def test_generate_streams_tokens(engine):
     seen = []
     r = engine.generate("hello", max_new_tokens=8,
@@ -72,6 +82,37 @@ def test_batcher_matches_single_request(engine):
                       max_new_tokens=5, on_done=lambda r: out.update(a=r.output_ids)))
     cb.run_until_drained()
     assert out["a"] == solo.tokens
+
+
+def test_generation_budget_respects_bucket():
+    """The capacity rule budgets against the padded BUCKET: a 33-token
+    prompt at max_seq=64 buckets to 32 (not 63), so 20 decode positions
+    fit inside the seq axis instead of silently clamping onto the last
+    KV slot."""
+    from repro.serving.scheduler import clip_prompt
+    ids, max_new = clip_prompt(list(range(33)), 20, 64)
+    assert len(ids) == 31 and max_new == 20          # bucket 32 + 20 <= 65
+    ids, max_new = clip_prompt(list(range(5)), 200, 96)
+    assert max_new == 81                             # bucket 16 + 81 <= 97
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=64)
+    r = e.generate(list(range(2, 35)), max_new_tokens=20)
+    assert r.n_prompt == 31 and len(r.tokens) <= 20
+
+
+def test_batcher_expired_in_queue_never_admitted(engine):
+    """A request whose deadline passed while queued is cancelled at the
+    admission pop — no prefill is burned and no stale token reaches the
+    client."""
+    cb = ContinuousBatcher(engine, slots=1, max_seq=96)
+    tokens, events = [], []
+    cb.submit(Request(rid="expired", prompt_ids=engine.tokenizer.encode("x"),
+                      max_new_tokens=8, deadline_s=1e-9,
+                      on_token=lambda t, s: tokens.append(t),
+                      on_done=lambda r: events.append((r.rid, r.cancelled))))
+    cb.step()
+    assert events == [("expired", True)]
+    assert tokens == [] and cb.active[0] is None
 
 
 def test_batcher_deadline_cancellation(engine):

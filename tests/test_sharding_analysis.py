@@ -5,14 +5,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import DEFAULT_RULES, logical_to_pspec
+from repro.distributed.sharding import (DEFAULT_RULES, logical_to_pspec,
+                                        make_abstract_mesh)
 from repro.launch.analysis import analytic_costs, analyze_hlo, roofline_terms
 from repro.configs import SHAPES, get_config
 
-MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
-MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH_1POD = make_abstract_mesh((16, 16), ("data", "model"))
+MESH_2POD = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_basic_resolution():

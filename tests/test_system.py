@@ -72,6 +72,36 @@ def test_proxy_stream_openai_format(system):
     assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
 
 
+def test_proxy_concurrent_sessions_interleave(system):
+    """N concurrent proxy SSE sessions run the dual-channel flow at the
+    same time and every stream completes — decode ticks interleave in
+    the HPC engine's shared batch instead of serializing on it."""
+    import threading
+    N, toks = 4, 6
+    bearers = [system.globus.issue_token(f"user{i}@uic.edu") for i in range(N)]
+    out = [None] * N
+    barrier = threading.Barrier(N)
+
+    def one(i):
+        barrier.wait()
+        resp = system.proxy.handle_chat_completions(
+            {"messages": [{"role": "user", "content": f"concurrent q{i}"}],
+             "max_tokens": toks, "stream": True}, bearer=bearers[i])
+        out[i] = (resp.status, parse_sse("".join(resp.stream)))
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for status, chunks in out:
+        assert status == 200
+        assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
+        assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
+        # one content frame per emitted token (role + finish bracket them)
+        assert len(chunks) == toks + 2
+
+
 def test_proxy_rejects_before_cluster_work(system):
     n_tasks = len(system.endpoint.task_records())
     resp = system.proxy.handle_chat_completions(
