@@ -63,6 +63,20 @@ def main() -> None:
                      f"{cc['ttft_c1_ratio']:.2f}x",
                      "concurrent/serial TTFT at 1 session"))
 
+    from benchmarks import gateway
+    r_gw = gateway.run(tokens=8 if small else 12, repeats=5 if small else 9,
+                       n_routed=9 if small else 30, quiet=True)
+    csv_rows.append(("gateway.local_ttft_ratio",
+                     f"{r_gw['overhead_ratio']:.3f}",
+                     "gateway/direct local TTFT (target <= 1.10)"))
+    dist = r_gw["tier_distribution"]
+    csv_rows.append(("gateway.auto_tier_distribution",
+                     "|".join(f"{t}:{n}" for t, n in sorted(dist.items())),
+                     "stream-auto routed tiers over mixed queries"))
+    for alias, r in r_gw["per_alias"].items():
+        csv_rows.append((f"gateway.{alias}.ttft_s",
+                         f"{r['ttft_p50']:.3f}", f"max={r['ttft_max']:.3f}s"))
+
     from benchmarks import roofline
     r4 = roofline.run()
     if r4:

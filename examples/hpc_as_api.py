@@ -1,5 +1,8 @@
-"""HPC-as-API proxy mode (paper §4): call institutional HPC like any
-OpenAI-compatible endpoint — bearer token + messages in, SSE out.
+"""The unified OpenAI-compatible gateway (paper §4, generalized): call
+the WHOLE three-tier router — judge, summarizer, fallback chains — like
+any OpenAI endpoint. Bearer token + messages in, SSE out; the model
+alias picks the routing (stream-auto / stream-local / stream-hpc /
+stream-cloud).
 
     PYTHONPATH=src python examples/hpc_as_api.py
 """
@@ -12,28 +15,43 @@ from repro.core.sse import parse_sse
 
 def main():
     system = build_system(dispatch_latency_s=0.05, max_seq=256)
+    gw = system.gateway
 
     # institutional user: Globus token, verified + domain-checked
     token = system.globus.issue_token("researcher@uic.edu")
-    print("== Globus-token mode (streaming) ==")
-    resp = system.proxy.handle_chat_completions(
-        {"model": "qwen2.5-vl-72b-awq",
-         "messages": [{"role": "user", "content": "Hello from a standard client"}],
-         "max_tokens": 16, "stream": True},
-        bearer=token, client_ip="10.1.2.3")
-    frames = "".join(resp.stream)
-    chunks = parse_sse(frames)
-    text = "".join(c["choices"][0]["delta"].get("content", "")
-                   for c in chunks if "choices" in c)
-    print(f"status={resp.status} chunks={len(chunks)} text={text[:60]!r}")
 
-    # external service: pre-issued API key, non-streaming
+    print("== /v1/models: the alias table ==")
+    models = gw.handle_models(bearer=token)
+    for card in models.body["data"]:
+        meta = card.get("metadata", {})
+        print(f"  {card['id']:>24s}  routing={meta.get('routing'):7s} "
+              f"tier={meta.get('tier', '-')}")
+
+    print("\n== stream-auto: judge-routed, streaming, with usage chunk ==")
+    resp = gw.handle_chat_completions(
+        {"model": "stream-auto",
+         "messages": [{"role": "user", "content": "What is the capital of France?"}],
+         "max_tokens": 16, "stream": True,
+         "stream_options": {"include_usage": True}},
+        bearer=token, client_ip="10.1.2.3")
+    chunks = parse_sse("".join(resp.stream))
+    text = "".join(c["choices"][0]["delta"].get("content", "")
+                   for c in chunks if c.get("choices"))
+    print(f"status={resp.status} tier={resp.headers['x-stream-tier']} "
+          f"complexity={resp.headers['x-stream-complexity']} "
+          f"chunks={len(chunks)} text={text[:40]!r}")
+    print(f"usage chunk: {json.dumps(chunks[-1]['usage'])}")
+    print(f"routing meta: {json.dumps(chunks[-1]['stream'])}")
+
+    # external service: API key, tier pinned, generation params contract
     key = system.api_keys.issue("cloud-app-team")
-    print("\n== API-key mode (non-streaming) ==")
-    resp2 = system.proxy.handle_chat_completions(
-        {"messages": [{"role": "user", "content": "one-shot completion"}],
+    print("\n== stream-hpc: API key, non-streaming, seeded sampling ==")
+    resp2 = gw.handle_chat_completions(
+        {"model": "stream-hpc", "temperature": 0.8, "seed": 7,
+         "messages": [{"role": "user", "content": "one-shot completion"}],
          "max_tokens": 8, "stream": False}, bearer=key)
-    print(f"status={resp2.status}")
+    print(f"status={resp2.status} tier={resp2.headers['x-stream-tier']} "
+          f"cost=${resp2.headers['x-stream-cost-usd']}")
     print(json.dumps(resp2.body, indent=2)[:400])
 
     # what gets rejected before any cluster work
@@ -41,13 +59,24 @@ def main():
     for req, bearer, why in [
         ({"messages": [{"role": "user", "content": "x"}]}, "bad-token", "bad auth"),
         ({"messages": [{"role": "pirate", "content": "x"}]}, token, "bad role"),
-        ({"messages": []}, token, "empty messages"),
+        ({"messages": [{"role": "user", "content": "x"}],
+          "temperature": "hot"}, token, "bad params"),
+        ({"model": "gpt-4o",
+          "messages": [{"role": "user", "content": "x"}]}, token, "bad model"),
     ]:
-        r = system.proxy.handle_chat_completions(req, bearer=bearer)
-        print(f"  {why:15s} -> HTTP {r.status} {r.body['error']['type']}")
+        r = gw.handle_chat_completions(req, bearer=bearer)
+        err = r.body["error"]
+        print(f"  {why:12s} -> HTTP {r.status} {err.get('code') or err['type']}")
 
-    print("\naudit log (identity + credential hash + IP, never content):")
-    print(json.dumps(system.proxy.audit_log[-2:], indent=2, default=str))
+    # the deprecated single-tier proxy still answers old callers
+    print("\n== deprecated HPCAsAPIProxy shim (old callers keep working) ==")
+    old = system.proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "legacy caller"}],
+         "max_tokens": 4, "stream": True}, bearer=token)
+    print(f"status={old.status} chunks={len(parse_sse(''.join(old.stream)))}")
+
+    print("\naudit log (identity + credential hash + IP + model, never content):")
+    print(json.dumps(list(gw.audit_log)[-2:], indent=2, default=str))
 
 
 if __name__ == "__main__":

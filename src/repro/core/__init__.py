@@ -1,5 +1,6 @@
 """STREAM's contribution: three-tier routing, dual-channel streaming,
-tier-aware summarization, HPC-as-API proxy."""
+tier-aware summarization, and the unified OpenAI-compatible gateway
+(plus the deprecated single-tier HPC-as-API proxy shim)."""
 
 from repro.core.crypto import AESGCM, InvalidTag, new_key
 from repro.core.relay import Relay, AuthError, RelayError, new_channel_id
@@ -9,12 +10,16 @@ from repro.core.judge import Complexity, KeywordJudge, FeatureJudge, CachedJudge
 from repro.core.summarizer import TierAwareSummarizer, SummarizerPolicy, DEFAULT_POLICIES
 from repro.core.router import TierRouter, FALLBACK_CHAINS
 from repro.core.handler import StreamingHandler
-from repro.core.tiers import TierSpec, TierResult, LocalBackend, HPCBackend, CloudBackend, BackendError
+from repro.core.tiers import (TierSpec, TierResult, TierBackend, LocalBackend,
+                              HPCBackend, CloudBackend, BackendError)
 from repro.core.auth import (GlobusAuthService, ApiKeyStore, DualAuthenticator,
                              SlidingWindowRateLimiter, AuthFailure)
-from repro.core.proxy import HPCAsAPIProxy, ValidationError
+from repro.core.gateway import (StreamGateway, GatewayResponse, ValidationError,
+                                validate_chat_request, DEFAULT_ALIASES)
+from repro.core.proxy import HPCAsAPIProxy
 from repro.core.metrics import UsageTracker
 from repro.core.system import StreamSystem, build_system
+from repro.serving.sampler import GenerationParams
 
 __all__ = [
     "AESGCM", "InvalidTag", "new_key",
@@ -24,9 +29,12 @@ __all__ = [
     "Complexity", "KeywordJudge", "FeatureJudge", "CachedJudge",
     "TierAwareSummarizer", "SummarizerPolicy", "DEFAULT_POLICIES",
     "TierRouter", "FALLBACK_CHAINS", "StreamingHandler",
-    "TierSpec", "TierResult", "LocalBackend", "HPCBackend", "CloudBackend", "BackendError",
+    "TierSpec", "TierResult", "TierBackend",
+    "LocalBackend", "HPCBackend", "CloudBackend", "BackendError",
     "GlobusAuthService", "ApiKeyStore", "DualAuthenticator",
     "SlidingWindowRateLimiter", "AuthFailure",
-    "HPCAsAPIProxy", "ValidationError", "UsageTracker",
+    "StreamGateway", "GatewayResponse", "ValidationError",
+    "validate_chat_request", "DEFAULT_ALIASES", "GenerationParams",
+    "HPCAsAPIProxy", "UsageTracker",
     "StreamSystem", "build_system",
 ]

@@ -137,6 +137,17 @@ class SlidingWindowRateLimiter:
             dq.append(now)
             return True
 
+    def retry_after(self, caller: str, now: float | None = None) -> float:
+        """Seconds until the caller's oldest in-window event expires —
+        the earliest moment a new request can succeed (the 429
+        ``Retry-After`` header, computed from the sliding window)."""
+        now = now if now is not None else time.monotonic()
+        with self._lock:
+            dq = self._events.get(caller)
+            if not dq or len(dq) < self.max_requests:
+                return 0.0
+            return max(dq[0] + self.window_s - now, 0.0)
+
 
 def credential_hash(bearer: str) -> str:
     """What lands in the audit log instead of the credential."""

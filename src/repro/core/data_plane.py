@@ -130,7 +130,7 @@ REMOTE_FN_SOURCE = '''
 import base64
 
 def hpc_stream_task(*, messages, model, channel_id, max_tokens=64,
-                    relay_url=None, vllm_url=None):
+                    gen_params=None, relay_url=None, vllm_url=None):
     """Runs ON the HPC worker. Submits to the cluster engine's shared
     continuous batch (ServingEngine.submit — the paper's vLLM-over-
     localhost call) so N concurrent tasks interleave their decode ticks
@@ -151,23 +151,27 @@ def hpc_stream_task(*, messages, model, channel_id, max_tokens=64,
     Producer = TOKEN_PRODUCER  # injected: repro.core.data_plane.TokenProducer
 
     prompt = "\\n".join(m.get("content", "") for m in messages)
+    # per-request generation contract rides the task args as a plain
+    # dict (engine.submit rebuilds GenerationParams from the wire form)
+    params = dict(gen_params) if gen_params else {"max_tokens": max_tokens}
 
     if relay is None:
         # batch fallback: no streaming; the complete response returns
         # through the control plane (TTFT == total time).
-        handle = engine.submit(prompt, max_new_tokens=max_tokens)
+        handle = engine.submit(prompt, params=params)
         res = handle.result(timeout=600.0)
-        return {"text": res.text, "n_tokens": res.n_generated, "streamed": False}
+        return {"text": res.text, "n_tokens": res.n_generated,
+                "finish_reason": res.finish_reason, "streamed": False}
 
     # stream as generated: the broker's on_token callback IS the relay
     # producer; a failed push cancels the session (slot reclamation)
     prod = Producer(relay, channel_id, secret, enc_key)
-    handle = engine.submit(prompt, max_new_tokens=max_tokens,
-                           on_token=prod.push)
+    handle = engine.submit(prompt, params=params, on_token=prod.push)
     res = handle.result(timeout=600.0)
     if res.cancelled:
         prod.fail("relay channel torn down")
         raise RuntimeError("stream cancelled: relay channel torn down")
     n = prod.done()
-    return {"text": res.text, "n_tokens": n, "streamed": True}
+    return {"text": res.text, "n_tokens": n,
+            "finish_reason": res.finish_reason, "streamed": True}
 '''

@@ -3,6 +3,12 @@
     judge -> route -> (summarize for target tier) -> dispatch -> stream
     -> usage log (no content) ; automatic fallback to the next tier in
     the chain on backend failure.
+
+Mid-stream fallback is duplicate-safe: the handler taps ``on_token`` and
+counts tokens already delivered to the caller, so when a backend dies
+AFTER emitting (a relay teardown halfway through a response), the next
+tier in the chain resumes the client-visible stream at the failure point
+instead of replaying the prefix (``_ResumeTap``).
 """
 
 from __future__ import annotations
@@ -16,6 +22,7 @@ from repro.core.metrics import UsageTracker
 from repro.core.router import TierRouter
 from repro.core.summarizer import TierAwareSummarizer, conversation_tokens
 from repro.core.tiers import BackendError, TierResult
+from repro.serving.sampler import GenerationParams
 
 
 @dataclass
@@ -27,6 +34,32 @@ class HandledQuery:
     fallback_depth: int
     summarized: bool
     judge_latency_s: float
+    resumed_tokens: int = 0   # tokens swallowed after a mid-stream fallback
+
+
+class _ResumeTap:
+    """Token tap making mid-stream fallback duplicate-safe. It forwards
+    tokens to the caller's ``on_token`` and counts deliveries; when a new
+    backend attempt starts after a failure, the first ``delivered``
+    tokens of the replacement stream are swallowed so the client never
+    sees the prefix twice."""
+
+    def __init__(self, on_token: Callable[[int, str], None]):
+        self._on_token = on_token
+        self.delivered = 0       # forwarded to the caller, across attempts
+        self.skip = 0            # replacement-stream tokens to swallow
+        self._seen = 0           # tokens seen in the CURRENT attempt
+
+    def new_attempt(self):
+        self.skip = self.delivered
+        self._seen = 0
+
+    def __call__(self, tid: int, text: str):
+        self._seen += 1
+        if self._seen <= self.skip:
+            return
+        self.delivered += 1
+        self._on_token(tid, text)
 
 
 class StreamingHandler:
@@ -37,19 +70,27 @@ class StreamingHandler:
         self.tracker = tracker or UsageTracker()
 
     def handle(self, query: str, history: list | None = None, *,
-               override_tier: str | None = None, max_tokens: int = 64,
+               override_tier: str | None = None,
+               params: GenerationParams | None = None, max_tokens: int = 64,
                on_token: Optional[Callable[[int, str], None]] = None,
-               cancel_event=None) -> HandledQuery:
+               cancel_event=None,
+               on_attempt: Optional[Callable] = None) -> HandledQuery:
         """Run one query through the pipeline. Thread-safe: concurrent
         handle() calls stream through each tier's session broker and
-        interleave in its decode batch. ``cancel_event`` (a
-        threading.Event) tears the in-flight stream down mid-generation
-        and frees its decode slot."""
+        interleave in its decode batch. ``params`` is the per-request
+        :class:`GenerationParams` contract (the legacy ``max_tokens``
+        kwarg is folded into it). ``cancel_event`` (a threading.Event)
+        tears the in-flight stream down mid-generation and frees its
+        decode slot. ``on_attempt(tier, depth, decision)`` fires just
+        before each backend dispatch — the gateway uses it to expose
+        routing metadata before the first token arrives."""
+        params = GenerationParams.of(params, max_tokens=max_tokens)
         history = list(history or [])
         decision = self.router.route(query, override_tier=override_tier)
         if not decision.chain:
             raise BackendError("no healthy tier available")
 
+        tap = _ResumeTap(on_token) if on_token is not None else None
         last_err: Exception | None = None
         for depth, tier in enumerate(decision.chain):
             backend = self.router.backends[tier]
@@ -60,9 +101,13 @@ class StreamingHandler:
                 last_err = BackendError(f"context exceeds {tier} window even "
                                         f"after summarization")
                 continue
+            if on_attempt is not None:
+                on_attempt(tier, depth, decision)
+            if tap is not None:
+                tap.new_attempt()
             try:
-                result = backend.stream(messages, max_tokens=max_tokens,
-                                        on_token=on_token,
+                result = backend.stream(messages, params=params,
+                                        on_token=tap,
                                         cancel_event=cancel_event)
             except BackendError as e:
                 last_err = e
@@ -77,7 +122,8 @@ class StreamingHandler:
             return HandledQuery(result=result, complexity=decision.complexity,
                                 tier_used=tier, chain=decision.chain,
                                 fallback_depth=depth, summarized=summarized,
-                                judge_latency_s=decision.judge_latency_s)
+                                judge_latency_s=decision.judge_latency_s,
+                                resumed_tokens=tap.skip if tap else 0)
         raise BackendError(f"all tiers failed; last error: {last_err}")
 
     def route_only(self, query: str, history: list | None = None) -> str:

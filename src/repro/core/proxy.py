@@ -1,178 +1,69 @@
-"""HPC-as-API proxy (paper §4): an OpenAI-compatible endpoint over the
-dual-channel flow. Callers need only a bearer token and a base URL.
+"""DEPRECATED — ``HPCAsAPIProxy`` survives as a thin shim over
+:class:`repro.core.gateway.StreamGateway`.
 
-Request path:
-  1. authenticate (Globus token first, API key fallback);
-  2. sliding-window rate limit per caller;
-  3. message-format validation (roles, content length, count) BEFORE any
-     control-plane work — unauthenticated/invalid requests never reach
-     the cluster;
-  4. run the dual-channel flow via the HPC backend;
-  5. return an OpenAI-compatible SSE stream (or a JSON completion).
+The proxy (paper §4) wrapped exactly one backend behind an
+OpenAI-compatible endpoint. The gateway generalizes it: the same
+middleware (auth -> rate limit -> validation -> audit) in front of the
+FULL judge/route/summarize/fallback pipeline, with model-alias routing
+over all tiers. New code should build a :class:`StreamGateway` (see
+``build_system(...).gateway``); this shim keeps the old constructor and
+``handle_chat_completions`` call surface working by pinning every
+request to the wrapped backend's tier through a single-tier handler.
 
-Every request is audit-logged with caller identity, credential hash and
-client IP — never message content.
+``ValidationError`` / ``validate_chat_request`` / ``ProxyResponse`` are
+re-exported from the gateway, where the shared middleware now lives.
 """
 
 from __future__ import annotations
 
-import json
-import time
-from dataclasses import dataclass, field
-from typing import Iterator
+from repro.core.auth import DualAuthenticator, SlidingWindowRateLimiter
+from repro.core.gateway import (MAX_CONTENT_CHARS, MAX_MESSAGES, VALID_ROLES,
+                                GatewayResponse, StreamGateway,
+                                ValidationError, validate_chat_request)
+from repro.core.handler import StreamingHandler
+from repro.core.metrics import UsageTracker
+from repro.core.router import TierRouter
+from repro.core.summarizer import (DEFAULT_POLICIES, SummarizerPolicy,
+                                   TierAwareSummarizer)
 
-from repro.core.auth import (AuthFailure, DualAuthenticator, SlidingWindowRateLimiter,
-                             credential_hash)
-from repro.core.sse import SSE_DONE, chat_chunk, chat_completion, new_request_id, sse_event
-from repro.core.tiers import BackendError, HPCBackend
-
-VALID_ROLES = {"system", "user", "assistant"}
-MAX_MESSAGES = 128
-MAX_CONTENT_CHARS = 65536
-
-
-@dataclass
-class ProxyResponse:
-    status: int
-    body: dict | None = None                      # non-stream responses
-    stream: Iterator[str] | None = None           # SSE frames
-    headers: dict = field(default_factory=dict)
-
-
-class ValidationError(Exception):
-    pass
-
-
-def validate_chat_request(req: dict):
-    if not isinstance(req, dict):
-        raise ValidationError("request body must be a JSON object")
-    msgs = req.get("messages")
-    if not isinstance(msgs, list) or not msgs:
-        raise ValidationError("messages must be a non-empty list")
-    if len(msgs) > MAX_MESSAGES:
-        raise ValidationError(f"too many messages (>{MAX_MESSAGES})")
-    for i, m in enumerate(msgs):
-        if not isinstance(m, dict):
-            raise ValidationError(f"messages[{i}] must be an object")
-        if m.get("role") not in VALID_ROLES:
-            raise ValidationError(f"messages[{i}].role must be one of {sorted(VALID_ROLES)}")
-        c = m.get("content")
-        if not isinstance(c, str):
-            raise ValidationError(f"messages[{i}].content must be a string")
-        if len(c) > MAX_CONTENT_CHARS:
-            raise ValidationError(f"messages[{i}].content too long")
-    mt = req.get("max_tokens", 64)
-    if not isinstance(mt, int) or not (1 <= mt <= 4096):
-        raise ValidationError("max_tokens must be an int in [1, 4096]")
+# legacy name for the response envelope
+ProxyResponse = GatewayResponse
 
 
 class HPCAsAPIProxy:
-    def __init__(self, backend: HPCBackend, authenticator: DualAuthenticator,
+    """Deprecated single-backend facade; use ``StreamGateway`` instead.
+
+    Every request routes to the wrapped backend's tier (no judge, no
+    cross-tier fallback — exactly the old proxy's semantics). Any
+    ``model`` string is accepted and echoed back, as before."""
+
+    def __init__(self, backend, authenticator: DualAuthenticator,
                  rate_limiter: SlidingWindowRateLimiter | None = None):
         self.backend = backend
         self.auth = authenticator
         self.limiter = rate_limiter or SlidingWindowRateLimiter()
-        self.audit_log: list[dict] = []
+        tier = backend.spec.name
+        router = TierRouter({tier: backend}, judge=None)  # override-only
+        policy = DEFAULT_POLICIES.get(tier) or SummarizerPolicy(
+            context_window=backend.spec.context_window,
+            summary_budget=2048, keep_turn_pairs=4)
+        handler = StreamingHandler(router, TierAwareSummarizer({tier: policy}),
+                                   UsageTracker())
+        self._gateway = StreamGateway(
+            handler, authenticator, self.limiter,
+            aliases={backend.spec.model_name: tier, f"stream-{tier}": tier},
+            default_model=backend.spec.model_name, default_tier=tier,
+            strict_models=False)
 
-    # ------------------------------------------------------------------
+    @property
+    def audit_log(self) -> list:
+        """A list snapshot of the gateway's bounded audit deque — old
+        callers sliced and json.dumps'ed a plain list, and a deque
+        supports neither; note the gateway bounds it, so the oldest
+        entries eventually age out."""
+        return list(self._gateway.audit_log)
+
     def handle_chat_completions(self, request: dict, *, bearer: str | None,
                                 client_ip: str = "0.0.0.0") -> ProxyResponse:
-        t0 = time.perf_counter()
-        # 1. auth before ANY cluster work
-        try:
-            ident = self.auth.authenticate(bearer)
-        except AuthFailure as e:
-            self._audit(None, bearer, client_ip, 401, str(e))
-            return ProxyResponse(status=401, body=_err("invalid_api_key", str(e)))
-        # 2. rate limit
-        if not self.limiter.allow(ident.subject):
-            self._audit(ident, bearer, client_ip, 429, "rate_limited")
-            return ProxyResponse(status=429, body=_err("rate_limit_exceeded",
-                                                       "per-caller sliding window exceeded"))
-        # 3. validation
-        try:
-            validate_chat_request(request)
-        except ValidationError as e:
-            self._audit(ident, bearer, client_ip, 400, f"validation: {e}")
-            return ProxyResponse(status=400, body=_err("invalid_request_error", str(e)))
-
-        messages = request["messages"]
-        max_tokens = request.get("max_tokens", 64)
-        stream = bool(request.get("stream", True))
-        model = request.get("model", self.backend.spec.model_name)
-        rid = new_request_id()
-        self._audit(ident, bearer, client_ip, 200, "accepted", request_id=rid)
-
-        if stream:
-            return ProxyResponse(status=200,
-                                 stream=self._stream_events(rid, model, messages, max_tokens),
-                                 headers={"content-type": "text/event-stream"})
-        try:
-            result = self.backend.stream(messages, max_tokens=max_tokens)
-        except BackendError as e:
-            return ProxyResponse(status=502, body=_err("upstream_error", str(e)))
-        return ProxyResponse(status=200, body=chat_completion(
-            rid, model, result.text, prompt_tokens=result.n_prompt_tokens,
-            completion_tokens=result.n_completion_tokens))
-
-    # ------------------------------------------------------------------
-    def _stream_events(self, rid: str, model: str, messages, max_tokens) -> Iterator[str]:
-        """Generator of SSE frames; runs the dual-channel flow lazily so the
-        first frame goes out as soon as the first token lands.
-
-        Closing the generator (the client disconnected mid-stream) sets
-        the backend's cancel_event: the relay consumer detaches, the
-        producer's next send fails, and the remote session's decode slot
-        is reclaimed — an abandoned stream never decodes to completion."""
-        yield sse_event(chat_chunk(rid, model, "", role="assistant"))
-        import queue as _q
-        import threading
-        q: _q.Queue = _q.Queue()
-        box: dict = {}
-        cancel_event = threading.Event()
-
-        def run():
-            try:
-                box["result"] = self.backend.stream(
-                    messages, max_tokens=max_tokens,
-                    on_token=lambda tid, text: q.put(text),
-                    cancel_event=cancel_event)
-            except Exception as e:  # surfaced as an SSE error frame
-                box["error"] = str(e)
-            finally:
-                q.put(None)
-
-        th = threading.Thread(target=run, daemon=True)
-        th.start()
-        try:
-            while True:
-                item = q.get()
-                if item is None:
-                    break
-                yield sse_event(chat_chunk(rid, model, item))
-        except GeneratorExit:
-            cancel_event.set()
-            raise
-        th.join()
-        if "error" in box:
-            yield sse_event({"error": {"message": box["error"], "type": "upstream_error"}})
-        else:
-            yield sse_event(chat_chunk(rid, model, "", finish_reason="stop"))
-        yield SSE_DONE
-
-    # ------------------------------------------------------------------
-    def _audit(self, ident, bearer, client_ip, status, note, request_id=None):
-        self.audit_log.append({
-            "ts": time.time(),
-            "caller": ident.subject if ident else "anonymous",
-            "auth_mode": ident.mode if ident else "none",
-            "credential_hash": credential_hash(bearer) if bearer else "",
-            "client_ip": client_ip,
-            "status": status,
-            "note": note,
-            "request_id": request_id,
-        })
-
-
-def _err(code: str, message: str) -> dict:
-    return {"error": {"type": code, "message": message}}
+        return self._gateway.handle_chat_completions(
+            request, bearer=bearer, client_ip=client_ip)

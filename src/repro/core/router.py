@@ -36,18 +36,13 @@ class TierRouter:
         self.backends = backends
         self.judge = judge
 
-    def route(self, query: str, *, override_tier: str | None = None) -> RouteDecision:
-        if override_tier is not None:
-            if override_tier not in self.backends:
-                raise KeyError(f"unknown tier {override_tier}")
-            rest = [t for t in ("local", "hpc", "cloud") if t != override_tier]
-            return RouteDecision(complexity=Complexity.MEDIUM,
-                                 chain=(override_tier, *rest),
-                                 judge_latency_s=0.0, overridden=True)
-        c, lat = self.judge.judge(query)
-        chain = FALLBACK_CHAINS[c]
-        # lightweight health check at routing time (~100 ms auth ping);
-        # unhealthy tiers are skipped in the chain, not retried.
+    def available_tiers(self) -> tuple:
+        """Tier names this router can dispatch to (gateway alias table)."""
+        return tuple(self.backends)
+
+    def _health_filter(self, chain) -> tuple:
+        """Lightweight health check (~100 ms auth ping); unhealthy tiers
+        are skipped in the chain, not retried."""
         healthy, skipped = [], []
         for t in chain:
             b = self.backends.get(t)
@@ -57,5 +52,24 @@ class TierRouter:
             except Exception:
                 ok = False
             (healthy if ok else skipped).append(t)
-        return RouteDecision(complexity=c, chain=tuple(healthy),
-                             judge_latency_s=lat, health_skipped=tuple(skipped))
+        return tuple(healthy), tuple(skipped)
+
+    def route(self, query: str, *, override_tier: str | None = None) -> RouteDecision:
+        if override_tier is not None:
+            if override_tier not in self.backends:
+                raise KeyError(f"unknown tier {override_tier}")
+            # the override tier leads unconditionally (the caller asked
+            # for it; a dead backend surfaces as a fallback, not a skip);
+            # the rest of the chain is restricted to known backends and
+            # health-filtered like any routed chain.
+            rest = [t for t in ("local", "hpc", "cloud")
+                    if t != override_tier and t in self.backends]
+            healthy, skipped = self._health_filter(rest)
+            return RouteDecision(complexity=Complexity.MEDIUM,
+                                 chain=(override_tier, *healthy),
+                                 judge_latency_s=0.0, overridden=True,
+                                 health_skipped=skipped)
+        c, lat = self.judge.judge(query)
+        healthy, skipped = self._health_filter(FALLBACK_CHAINS[c])
+        return RouteDecision(complexity=c, chain=healthy,
+                             judge_latency_s=lat, health_skipped=skipped)

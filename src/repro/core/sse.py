@@ -46,7 +46,7 @@ def chat_chunk(request_id: str, model: str, delta: str, *, role=None,
 
 
 def chat_completion(request_id: str, model: str, text: str, *, prompt_tokens=0,
-                    completion_tokens=0) -> dict:
+                    completion_tokens=0, finish_reason: str = "stop") -> dict:
     return {
         "id": request_id,
         "object": "chat.completion",
@@ -54,11 +54,32 @@ def chat_completion(request_id: str, model: str, text: str, *, prompt_tokens=0,
         "model": model,
         "choices": [{"index": 0,
                      "message": {"role": "assistant", "content": text},
-                     "finish_reason": "stop"}],
+                     "finish_reason": finish_reason}],
         "usage": {"prompt_tokens": prompt_tokens,
                   "completion_tokens": completion_tokens,
                   "total_tokens": prompt_tokens + completion_tokens},
     }
+
+
+def usage_chunk(request_id: str, model: str, *, prompt_tokens=0,
+                completion_tokens=0, stream_meta: dict | None = None) -> dict:
+    """The final ``stream_options.include_usage`` chunk: empty choices,
+    a ``usage`` block, and (vendor extension) the STREAM routing
+    metadata under ``"stream"`` — tier served, judge complexity,
+    fallback depth, cost — mirroring the ``x-stream-*`` headers."""
+    chunk = {
+        "id": request_id,
+        "object": "chat.completion.chunk",
+        "created": int(time.time()),
+        "model": model,
+        "choices": [],
+        "usage": {"prompt_tokens": prompt_tokens,
+                  "completion_tokens": completion_tokens,
+                  "total_tokens": prompt_tokens + completion_tokens},
+    }
+    if stream_meta:
+        chunk["stream"] = dict(stream_meta)
+    return chunk
 
 
 def new_request_id() -> str:

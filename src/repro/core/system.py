@@ -1,5 +1,6 @@
 """Assemble a full STREAM deployment: tiers, judge, router, summarizer,
-handler, proxy — server mode (all components) in one call.
+handler, gateway (+ the deprecated proxy shim) — server mode (all
+components) in one call.
 
 The HPC tier's endpoint gets the tier engine + relay handle injected as
 worker globals (the vLLM-over-localhost analogue) and the credentials
@@ -20,6 +21,7 @@ from repro.core.auth import ApiKeyStore, DualAuthenticator, GlobusAuthService, S
 from repro.core.control_plane import ComputeEndpoint
 from repro.core.crypto import new_key
 from repro.core.data_plane import TokenProducer, produce_tokens
+from repro.core.gateway import StreamGateway
 from repro.core.handler import StreamingHandler
 from repro.core.judge import CachedJudge, FeatureJudge, KeywordJudge
 from repro.core.metrics import UsageTracker
@@ -39,11 +41,12 @@ class StreamSystem:
     tracker: UsageTracker
     relay: Relay
     endpoint: ComputeEndpoint
-    proxy: HPCAsAPIProxy
+    proxy: HPCAsAPIProxy            # deprecated shim (HPC tier only)
     globus: GlobusAuthService
     api_keys: ApiKeyStore
     backends: dict
     engines: dict
+    gateway: StreamGateway = None   # the OpenAI facade over ALL tiers
 
 
 def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
@@ -53,8 +56,8 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                  summarizer_policies: dict | None = None,
                  hpc_fail: bool = False, cloud_fail: bool = False,
                  rate_limit: int = 1000, scheduler_slots: int = 8,
-                 hpc_workers: int = 8,
-                 hpc_overrides: dict | None = None) -> StreamSystem:
+                 hpc_workers: int = 8, hpc_overrides: dict | None = None,
+                 local_overrides: dict | None = None) -> StreamSystem:
     """Everything wired, smoke-scale models (CPU-friendly).
 
     ``scheduler_slots`` sizes each tier engine's session broker (the
@@ -73,6 +76,8 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
         # e.g. benchmarks scale the HPC model up toward a realistic
         # compute weight (smoke configs are contention-test sized)
         hpc_cfg = hpc_cfg.replace(**hpc_overrides)
+    if local_overrides:
+        local_cfg = local_cfg.replace(**local_overrides)
     local_engine = ServingEngine(local_cfg, max_seq=max_seq, rng=rng,
                                  scheduler_slots=scheduler_slots)
     hpc_engine = ServingEngine(hpc_cfg, max_seq=max_seq, rng=rng,
@@ -119,10 +124,16 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
     tracker = UsageTracker()
     handler = StreamingHandler(router, summarizer, tracker)
 
-    # --- HPC-as-API proxy ---
+    # --- OpenAI-compatible facade ---
     globus = GlobusAuthService()
     api_keys = ApiKeyStore()
     authenticator = DualAuthenticator(globus, api_keys)
+    # the gateway fronts the FULL routed pipeline (stream-auto/-local/
+    # -hpc/-cloud aliases); the deprecated proxy shim keeps the old
+    # single-tier call surface alive. Separate limiters so a caller's
+    # budget isn't double-counted across the two entry points.
+    gateway = StreamGateway(handler, authenticator,
+                            SlidingWindowRateLimiter(max_requests=rate_limit))
     proxy = HPCAsAPIProxy(backends["hpc"], authenticator,
                           SlidingWindowRateLimiter(max_requests=rate_limit))
 
@@ -130,4 +141,5 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                         tracker=tracker, relay=relay, endpoint=endpoint,
                         proxy=proxy, globus=globus, api_keys=api_keys,
                         backends=backends,
-                        engines={"local": local_engine, "hpc": hpc_engine})
+                        engines={"local": local_engine, "hpc": hpc_engine},
+                        gateway=gateway)

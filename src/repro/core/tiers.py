@@ -11,8 +11,12 @@
   * CloudBackend — simulated commercial API: configurable TTFT/rate
     latency model + real per-token cost accounting (no network here).
 
-All backends expose stream(messages, max_tokens, on_token,
-cancel_event) -> TierResult and health_check().
+All backends implement the :class:`TierBackend` protocol:
+stream(messages, params=GenerationParams, on_token, cancel_event)
+-> TierResult, plus health_check(). ``params`` is the first-class
+generation contract (temperature / top_p / stop / seed / max_tokens)
+threaded from the gateway down to the engine's sampler; the legacy
+``max_tokens=`` kwarg is still accepted and folded into it.
 
 Concurrency: every backend streams through the engine's session broker
 (``ServingEngine.submit``) rather than a blocking ``generate`` call, so
@@ -29,12 +33,13 @@ import base64
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Protocol, runtime_checkable
 
 from repro.core.control_plane import ComputeEndpoint, TaskFailed
 from repro.core.data_plane import (REMOTE_FN_NAME, REMOTE_FN_SOURCE,
                                    consume_tokens, produce_tokens)
 from repro.core.relay import Relay, new_channel_id
+from repro.serving.sampler import GenerationParams
 
 
 @dataclass(frozen=True)
@@ -58,11 +63,38 @@ class TierResult:
     tok_per_s: float
     cost_usd: float
     streamed: bool
+    finish_reason: str = "stop"    # "stop" | "length" | "cancelled"
     error: Optional[str] = None
 
 
 class BackendError(Exception):
     pass
+
+
+@runtime_checkable
+class TierBackend(Protocol):
+    """The backend contract every tier implements — what the router,
+    handler, and gateway program against. ``stream`` MUST honor
+    ``params`` (sampling + stop + max_tokens), fire ``on_token`` per
+    generated token on whatever thread produces it, and tear the
+    session down (freeing its decode slot) when ``cancel_event`` is
+    set. ``health_check`` must be cheap (~100 ms auth ping at most) —
+    it runs at routing time for every query."""
+
+    spec: TierSpec
+
+    def stream(self, messages, *, params: GenerationParams | None = None,
+               max_tokens: int | None = None,
+               on_token: Optional[Callable[[int, str], None]] = None,
+               cancel_event=None) -> TierResult: ...
+
+    def health_check(self) -> bool: ...
+
+
+def _resolve_params(params, max_tokens) -> GenerationParams:
+    """Transitional shim: fold the legacy ``max_tokens`` kwarg into the
+    params contract (an explicit GenerationParams always wins)."""
+    return GenerationParams.of(params, max_tokens=max_tokens)
 
 
 def _join_messages(messages) -> str:
@@ -83,8 +115,9 @@ class LocalBackend:
     def health_check(self) -> bool:
         return True
 
-    def stream(self, messages, *, max_tokens=64, on_token=None,
+    def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
                cancel_event=None) -> TierResult:
+        gp = _resolve_params(params, max_tokens)
         t0 = time.perf_counter()
         prompt = _join_messages(messages)
         box = {}
@@ -101,21 +134,27 @@ class LocalBackend:
             if on_token:
                 on_token(tid, text)
 
-        handle = self.engine.submit(prompt, max_new_tokens=max_tokens,
-                                    on_token=cb)
+        handle = self.engine.submit(prompt, params=gp, on_token=cb)
         handle_box["h"] = handle
         try:
             res = handle.result(timeout=self.timeout_s)
         except TimeoutError as e:
             handle.cancel()          # don't leak the decode slot
             raise BackendError(f"local session timed out: {e}") from e
+        if res.cancelled and not (cancel_event is not None
+                                  and cancel_event.is_set()):
+            # the broker cancelled us (scheduler fault, dead callback) —
+            # NOT the caller: surface it so the handler falls back to
+            # the next tier instead of returning a truncated 200
+            raise BackendError(
+                f"local session failed: {res.error or 'cancelled by broker'}")
         total = time.perf_counter() - t0
         return TierResult(
             tier=self.spec.name, model=self.spec.model_name, text=res.text,
             n_prompt_tokens=res.n_prompt, n_completion_tokens=res.n_generated,
             ttft_s=box.get("ttft", total), total_s=total,
             tok_per_s=res.n_generated / max(total - box.get("ttft", 0.0), 1e-9),
-            cost_usd=0.0, streamed=True,
+            cost_usd=0.0, streamed=True, finish_reason=res.finish_reason,
             error="cancelled" if res.cancelled else None)
 
 
@@ -137,25 +176,29 @@ class HPCBackend:
         """Lightweight auth check (~100 ms) — NOT a full task round-trip."""
         return self.endpoint.health_check()
 
-    def stream(self, messages, *, max_tokens=64, on_token=None,
+    def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
                cancel_event=None) -> TierResult:
+        gp = _resolve_params(params, max_tokens)
         if self.relay_enabled and self.relay is not None:
-            return self._stream_relay(messages, max_tokens, on_token, cancel_event)
-        return self._batch_fallback(messages, max_tokens, on_token)
+            return self._stream_relay(messages, gp, on_token, cancel_event)
+        return self._batch_fallback(messages, gp, on_token)
 
     # ---- dual-channel path ----
-    def _stream_relay(self, messages, max_tokens, on_token, cancel_event=None) -> TierResult:
+    def _stream_relay(self, messages, gp: GenerationParams, on_token,
+                      cancel_event=None) -> TierResult:
         t0 = time.perf_counter()
         # (1) fresh UUID channel per query
         channel_id = new_channel_id()
         # (2) submit the control-plane task with the channel id as an arg
-        #     (no credentials in args — pre-provisioned worker env).
+        #     (no credentials in args — pre-provisioned worker env; the
+        #     generation params ride as a plain JSON-able dict).
         fut = self.endpoint.submit(
             REMOTE_FN_SOURCE, REMOTE_FN_NAME,
             messages=[{"role": m.get("role", "user"), "content": m.get("content", "")}
                       for m in messages],
             model=self.spec.model_name, channel_id=channel_id,
-            max_tokens=max_tokens, relay_url="wss://relay.example/ws",
+            max_tokens=gp.max_tokens, gen_params=gp.to_dict(),
+            relay_url="wss://relay.example/ws",
             vllm_url="http://127.0.0.1:8000/v1")
         # (3) immediately open the consumer — it is usually waiting before
         #     the first token arrives (dispatch takes a few hundred ms).
@@ -186,20 +229,23 @@ class HPCBackend:
         total = time.perf_counter() - t0
         ttft = ttft if ttft is not None else total
         text = "".join(pieces) if cancelled else result.get("text", "".join(pieces))
+        finish = ("cancelled" if cancelled
+                  else result.get("finish_reason", "stop") or "stop")
         return TierResult(
             tier=self.spec.name, model=self.spec.model_name, text=text,
             n_prompt_tokens=sum(len(m.get("content", "")) for m in messages),
             n_completion_tokens=n, ttft_s=ttft, total_s=total,
             tok_per_s=n / max(total - ttft, 1e-9), cost_usd=0.0, streamed=True,
-            error="cancelled" if cancelled else None)
+            finish_reason=finish, error="cancelled" if cancelled else None)
 
     # ---- batch fallback (relay unavailable; paper §7.2 row 3) ----
-    def _batch_fallback(self, messages, max_tokens, on_token) -> TierResult:
+    def _batch_fallback(self, messages, gp: GenerationParams, on_token) -> TierResult:
         t0 = time.perf_counter()
         fut = self.endpoint.submit(
             REMOTE_FN_SOURCE, REMOTE_FN_NAME,
             messages=list(messages), model=self.spec.model_name,
-            channel_id=new_channel_id(), max_tokens=max_tokens)
+            channel_id=new_channel_id(), max_tokens=gp.max_tokens,
+            gen_params=gp.to_dict())
         try:
             result = fut.result(timeout=self.task_timeout_s)
         except TaskFailed as e:
@@ -213,7 +259,8 @@ class HPCBackend:
             tier=self.spec.name, model=self.spec.model_name, text=text,
             n_prompt_tokens=sum(len(m.get("content", "")) for m in messages),
             n_completion_tokens=n, ttft_s=total, total_s=total,  # TTFT == total
-            tok_per_s=n / max(total, 1e-9), cost_usd=0.0, streamed=False)
+            tok_per_s=n / max(total, 1e-9), cost_usd=0.0, streamed=False,
+            finish_reason=result.get("finish_reason", "stop") or "stop")
 
 
 class CloudBackend:
@@ -233,23 +280,32 @@ class CloudBackend:
     def health_check(self) -> bool:
         return not self.fail
 
-    def stream(self, messages, *, max_tokens=64, on_token=None,
+    def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
                cancel_event=None) -> TierResult:
+        gp = _resolve_params(params, max_tokens)
         if self.fail:
             raise BackendError("cloud API unreachable")
         t0 = time.perf_counter()
         prompt = _join_messages(messages)
         handle = None
+        done_box = {}
         if self.engine is not None:
             # real token content rides the shared decode batch; the
             # latency model below only paces *delivery*, so concurrent
             # cloud sessions don't serialize on the engine either
             import queue as _q
             q: _q.Queue = _q.Queue()
+
+            def _done(res):
+                done_box["finish"] = res.finish_reason
+                if res.cancelled:
+                    done_box["fault"] = res.error or "cancelled by broker"
+                q.put(None)
+
             handle = self.engine.submit(
-                prompt, max_new_tokens=max_tokens,
+                prompt, params=gp,
                 on_token=lambda tid, text: q.put((tid, text)),
-                on_done=lambda res: q.put(None))
+                on_done=_done)
 
             def _iter(h=handle):
                 while True:
@@ -265,7 +321,7 @@ class CloudBackend:
 
             token_iter = _iter()
         else:
-            token_iter = ((i, f"cloud-token-{i} ") for i in range(max_tokens))
+            token_iter = ((i, f"cloud-token-{i} ") for i in range(gp.max_tokens))
         time.sleep(self.ttft_s)
         ttft = time.perf_counter() - t0
         out = []
@@ -282,13 +338,20 @@ class CloudBackend:
             if on_token:
                 on_token(tid, text)
             time.sleep(1.0 / self.tok_per_s)
+        if done_box.get("fault") and not cancelled and not (
+                cancel_event is not None and cancel_event.is_set()):
+            # engine-side fault, not a caller cancel: fall back, don't
+            # bill the caller for a truncated completion
+            raise BackendError(f"cloud session failed: {done_box['fault']}")
         total = time.perf_counter() - t0
         n_prompt = len(prompt.encode()) + 1
         cost = (n_prompt * self.spec.cost_per_1k_prompt
                 + n_comp * self.spec.cost_per_1k_completion) / 1000.0
+        finish = ("cancelled" if cancelled
+                  else done_box.get("finish") or "length")
         return TierResult(
             tier=self.spec.name, model=self.spec.model_name, text="".join(out),
             n_prompt_tokens=n_prompt, n_completion_tokens=n_comp,
             ttft_s=ttft, total_s=total, tok_per_s=n_comp / max(total - ttft, 1e-9),
-            cost_usd=cost, streamed=True,
+            cost_usd=cost, streamed=True, finish_reason=finish,
             error="cancelled" if cancelled else None)

@@ -1,6 +1,6 @@
 """Serving driver: stand up the full STREAM system (three tiers,
-dual-channel relay, HPC-as-API proxy) and run batched requests through
-it — the serving analogue of the training driver.
+dual-channel relay, OpenAI-compatible gateway) and run batched requests
+through it — the serving analogue of the training driver.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 12 --tokens 32
 """
@@ -43,13 +43,19 @@ def main():
               f"tok/s={h.result.tok_per_s:7.1f} cost=${h.result.cost_usd:.5f} "
               f"| {q[:48]}...")
 
-    # one request through the OpenAI-compatible proxy
+    # one request per model alias through the OpenAI-compatible gateway
     token = sys_.globus.issue_token("demo@uic.edu")
-    resp = sys_.proxy.handle_chat_completions(
-        {"messages": [{"role": "user", "content": "hello via the proxy"}],
-         "max_tokens": 8, "stream": True}, bearer=token)
-    n_chunks = len(parse_sse("".join(resp.stream)))
-    print(f"\nHPC-as-API proxy: status={resp.status} chunks={n_chunks}")
+    print()
+    for alias in ("stream-auto", "stream-local", "stream-hpc", "stream-cloud"):
+        resp = sys_.gateway.handle_chat_completions(
+            {"model": alias,
+             "messages": [{"role": "user", "content": f"hello via {alias}"}],
+             "max_tokens": 8, "stream": True,
+             "stream_options": {"include_usage": True}}, bearer=token)
+        chunks = parse_sse("".join(resp.stream))
+        print(f"gateway {alias:>13s}: status={resp.status} "
+              f"tier={resp.headers['x-stream-tier']:5s} chunks={len(chunks)} "
+              f"usage={json.dumps(chunks[-1]['usage'])}")
     print("\nusage summary:")
     print(json.dumps(sys_.tracker.summary(), indent=2, default=float))
 

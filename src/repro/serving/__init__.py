@@ -1,8 +1,10 @@
 from repro.serving.engine import ServingEngine, GenerationResult
+from repro.serving.sampler import GenerationParams, SamplerConfig
 from repro.serving.tokenizer import ByteTokenizer
 from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.serving.broker import SessionBroker, SessionHandle, SessionResult
 
 __all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
+           "GenerationParams", "SamplerConfig",
            "ContinuousBatcher", "Request",
            "SessionBroker", "SessionHandle", "SessionResult"]

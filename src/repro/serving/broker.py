@@ -29,6 +29,7 @@ import uuid
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro.serving.sampler import GenerationParams
 from repro.serving.scheduler import ContinuousBatcher, Request, clip_prompt
 
 
@@ -43,6 +44,7 @@ class SessionResult:
     n_prompt: int
     n_generated: int
     cancelled: bool = False
+    finish_reason: str = "stop"      # "stop" | "length" | "cancelled"
     error: Optional[str] = None
 
 
@@ -95,8 +97,14 @@ class SessionBroker:
     def submit(self, prompt, *, max_new_tokens: int = 32,
                on_token: Optional[Callable[[int, str], None]] = None,
                on_done: Optional[Callable[[SessionResult], None]] = None,
-               deadline_s: float = 0.0, rid: str | None = None) -> SessionHandle:
-        """Enqueue one streaming session; thread-safe, returns immediately."""
+               deadline_s: float = 0.0, rid: str | None = None,
+               params: GenerationParams | dict | None = None) -> SessionHandle:
+        """Enqueue one streaming session; thread-safe, returns immediately.
+        ``params`` (a :class:`GenerationParams`, or its dict wire form)
+        carries the per-request sampling contract; when given, its
+        ``max_tokens`` wins over the legacy ``max_new_tokens`` kwarg."""
+        gp = GenerationParams.of(params, max_tokens=max_new_tokens)
+        max_new_tokens = gp.max_tokens
         tk = self.engine.tokenizer
         ids = tk.encode(prompt) if isinstance(prompt, str) else list(prompt)
         ids, max_new_tokens = clip_prompt(ids, max_new_tokens,
@@ -122,10 +130,12 @@ class SessionBroker:
             ttft = handle.ttft_s if handle.ttft_s is not None else total
             n = len(r.output_ids)
             res = SessionResult(
-                tokens=list(r.output_ids), text=tk.decode(r.output_ids),
+                tokens=list(r.output_ids), text=r.final_text(tk),
                 ttft_s=ttft, total_s=total,
                 tok_per_s=n / max(total - ttft, 1e-9),
                 n_prompt=len(ids), n_generated=n, cancelled=r.cancelled,
+                finish_reason=r.finish_reason
+                or ("cancelled" if r.cancelled else "stop"),
                 error="callback error" if state["dead_cb"] else r.error)
             handle._result = res
             handle._event.set()
@@ -136,7 +146,8 @@ class SessionBroker:
                     pass
 
         req = Request(rid=rid, prompt_ids=ids, max_new_tokens=max_new_tokens,
-                      on_token=tok_cb, on_done=done_cb, deadline_s=deadline_s)
+                      on_token=tok_cb, on_done=done_cb, deadline_s=deadline_s,
+                      params=gp)
         handle._cancel_fn = lambda: self._cancel(req)
         with self._lock:
             if self._shutdown:
@@ -194,6 +205,12 @@ class SessionBroker:
                 busy = bool(self.batcher.queue) or self.batcher._in_flight() > 0
                 if busy:
                     self.batcher.step()
+                    # a tick's on_token callbacks just woke consumer
+                    # threads (gateway SSE queues, relay producers);
+                    # offer the GIL so they run NOW instead of waiting
+                    # out the interpreter's 5 ms switch interval —
+                    # first-token delivery latency, not throughput
+                    time.sleep(0)
             except Exception as e:
                 # never let one bad tick kill the scheduler thread: fail
                 # the in-flight sessions and keep serving new submits

@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.common import ModelConfig
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import (GenerationParams, SamplerConfig,
+                                   StopMatcher, sample, sample_slots)
 from repro.serving.scheduler import clip_prompt
 from repro.serving.tokenizer import ByteTokenizer
 
@@ -35,6 +36,7 @@ class GenerationResult:
     tok_per_s: float
     n_prompt: int
     n_generated: int
+    finish_reason: str = "stop"  # "stop" | "length"
 
 
 class ServingEngine:
@@ -87,19 +89,22 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt, *, max_new_tokens: int = 32,
                on_token: Optional[Callable[[int, str], None]] = None,
-               on_done=None, deadline_s: float = 0.0, rid: str | None = None):
+               on_done=None, deadline_s: float = 0.0, rid: str | None = None,
+               params: GenerationParams | dict | None = None):
         """Thread-safe streaming submission: enqueue one session and
         return a :class:`repro.serving.broker.SessionHandle` immediately.
         Concurrent sessions interleave in the broker's shared decode
         batch; every tier backend streams through here instead of
-        serial ``generate`` calls."""
+        serial ``generate`` calls. ``params`` is the per-request
+        :class:`GenerationParams` contract (dict wire form accepted)."""
         if self.use_scheduler:
             return self._get_broker().submit(
                 prompt, max_new_tokens=max_new_tokens, on_token=on_token,
-                on_done=on_done, deadline_s=deadline_s, rid=rid)
+                on_done=on_done, deadline_s=deadline_s, rid=rid, params=params)
         # legacy serial path: one blocking generate at a time, callers
         # queue on the engine lock (TTFT includes the queue wait)
         from repro.serving.broker import SessionHandle, SessionResult
+        gp = GenerationParams.of(params, max_tokens=max_new_tokens)
         handle = SessionHandle(rid or uuid.uuid4().hex[:12], lambda: None)
 
         def cb(tid, text):
@@ -109,14 +114,15 @@ class ServingEngine:
                 on_token(tid, text)
 
         with self._serial_lock:
-            res = self.generate(prompt, max_new_tokens=max_new_tokens,
-                                on_token=cb)
+            res = self.generate(prompt, max_new_tokens=gp.max_tokens,
+                                on_token=cb, params=gp if params else None)
         total = time.perf_counter() - handle.submitted_at
         ttft = handle.ttft_s if handle.ttft_s is not None else total
         sr = SessionResult(tokens=res.tokens, text=res.text, ttft_s=ttft,
                            total_s=total,
                            tok_per_s=res.n_generated / max(total - ttft, 1e-9),
-                           n_prompt=res.n_prompt, n_generated=res.n_generated)
+                           n_prompt=res.n_prompt, n_generated=res.n_generated,
+                           finish_reason=res.finish_reason)
         handle._result = sr
         handle._event.set()
         if on_done:
@@ -150,9 +156,17 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def generate(self, prompt: str | list, *, max_new_tokens: int = 32,
                  on_token: Optional[Callable[[int, str], None]] = None,
-                 stop_on_eos: bool = True) -> GenerationResult:
-        """Single-request generation with per-token streaming callback."""
+                 stop_on_eos: bool = True,
+                 params: GenerationParams | dict | None = None) -> GenerationResult:
+        """Single-request generation with per-token streaming callback.
+        ``params`` overrides the engine's default sampler per call
+        (temperature/top_p/seed) and adds stop-string matching — the
+        same contract, and for seeded requests the same sample stream,
+        as the continuous batcher."""
         t0 = time.perf_counter()
+        gp = GenerationParams.of(params) if params is not None else None
+        if gp is not None:
+            max_new_tokens = gp.max_tokens
         if isinstance(prompt, str):
             ids = self.tokenizer.encode(prompt)
         else:
@@ -162,33 +176,84 @@ class ServingEngine:
         ids_p = [self.tokenizer.pad_id] * (bucket - len(ids)) + ids  # left-pad
         toks = jnp.asarray([ids_p], jnp.int32)
 
+        # per-slot sampling only when the request overrides the engine
+        # sampler — params that merely set max_tokens/stop keep the
+        # engine-default draw (this un-jitted path pays per-op dispatch,
+        # so it must stay as cheap as the pre-params baseline)
+        override = gp is not None and (gp.temperature is not None
+                                       or gp.top_p is not None
+                                       or gp.seed is not None)
+        if override:
+            sc = self.sampler
+            temps = jnp.full((1,), gp.temperature if gp.temperature is not None
+                             else sc.temperature, jnp.float32)
+            topps = jnp.full((1,), gp.top_p if gp.top_p is not None
+                             else sc.top_p, jnp.float32)
+            # same int32 mask as the batcher, so serial and batched
+            # draws of one seeded request stay identical
+            seeds = jnp.full((1,), (gp.seed & 0x7FFFFFFF)
+                             if gp.seed is not None else -1, jnp.int32)
+
+        def draw(logits, step):
+            self.rng, k = jax.random.split(self.rng)
+            if not override:
+                return sample(logits, k, self.sampler)
+            return sample_slots(logits, k, self.sampler, temps, topps, seeds,
+                                jnp.full((1,), step, jnp.int32))
+
         cache = self.model.init_cache(1, self.max_seq)
         logits, cache = self._prefill(self.params, toks, cache)
-        self.rng, k = jax.random.split(self.rng)
-        tok = sample(logits, k, self.sampler)[:, None]
+        tok = draw(logits, 0)[:, None]
 
         first = int(tok[0, 0])
         ttft = time.perf_counter() - t0
         out = [first]
-        if on_token:
-            on_token(first, self.tokenizer.decode_token(first))
+        # same incremental stop semantics as the batcher: possible stop
+        # prefixes are withheld until disambiguated, a completed stop is
+        # never delivered, and the response text ends before it
+        matcher = StopMatcher(gp.stop) if gp is not None and gp.stop else None
+        finish = ""
 
+        def emit(t: int) -> bool:
+            text = self.tokenizer.decode_token(t)
+            if matcher is None:
+                if on_token:
+                    on_token(t, text)
+                return False
+            d = matcher.feed(text)
+            if d and on_token:
+                on_token(t, d)
+            return matcher.stopped
+
+        if emit(first):
+            finish = "stop"
         for i in range(max_new_tokens - 1):
+            if finish:
+                break
             if stop_on_eos and out[-1] == self.tokenizer.eos_id:
+                finish = "stop"
                 break
             logits, cache = self._decode(self.params, tok, cache)
-            self.rng, k = jax.random.split(self.rng)
-            tok = sample(logits, k, self.sampler)[:, None]
+            tok = draw(logits, len(out))[:, None]
             t = int(tok[0, 0])
             out.append(t)
-            if on_token:
-                on_token(t, self.tokenizer.decode_token(t))
+            if emit(t):
+                finish = "stop"
+                break
 
+        if not finish:
+            finish = ("stop" if stop_on_eos and out[-1] == self.tokenizer.eos_id
+                      else "length")
+        if matcher is not None and not matcher.stopped:
+            d = matcher.flush()
+            if d and on_token:
+                on_token(-1, d)
+        text = matcher.text if matcher is not None else self.tokenizer.decode(out)
         total = time.perf_counter() - t0
         return GenerationResult(
-            tokens=out, text=self.tokenizer.decode(out), ttft_s=ttft,
+            tokens=out, text=text, ttft_s=ttft,
             total_s=total, tok_per_s=len(out) / max(total - ttft, 1e-9),
-            n_prompt=len(ids), n_generated=len(out))
+            n_prompt=len(ids), n_generated=len(out), finish_reason=finish)
 
     # ------------------------------------------------------------------
     def generate_batch(self, prompts: list[str], *, max_new_tokens: int = 32):

@@ -1,8 +1,20 @@
-"""Token samplers: greedy / temperature / top-k, vocab-mask aware."""
+"""Token samplers + the per-request generation-params contract.
+
+``SamplerConfig`` is the ENGINE default (greedy / temperature / top-k /
+top-p, vocab-mask aware). ``GenerationParams`` is the PER-REQUEST
+contract threaded end to end — gateway -> handler -> tier backend ->
+broker -> this module — replacing the old ad-hoc ``max_tokens``-only
+kwargs. A field left ``None`` inherits the engine default, so existing
+callers are unaffected.
+
+The continuous batcher mixes requests with different params in one
+fused device step, so ``sample_slots`` samples every decode slot with
+its OWN temperature / top-p / seed in a single jitted call.
+"""
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -12,19 +24,182 @@ import jax.numpy as jnp
 class SamplerConfig:
     temperature: float = 0.0    # 0 -> greedy
     top_k: int = 0              # 0 -> full softmax
+    top_p: float = 1.0          # 1 -> nucleus filtering disabled
     vocab_size: int = 0         # mask padded logits beyond this
 
 
-def sample(logits, rng, sc: SamplerConfig):
-    """logits (B, V) -> token ids (B,)."""
+@dataclass(frozen=True)
+class GenerationParams:
+    """Per-request generation contract (the OpenAI chat-completions
+    subset the gateway exposes). ``None`` means "inherit the engine's
+    SamplerConfig default"; ``stop`` strings are matched host-side
+    against the decoded stream tail; ``seed`` pins the request's sample
+    stream independent of batch composition."""
+    max_tokens: int = 64
+    temperature: float | None = None
+    top_p: float | None = None
+    stop: tuple = ()
+    seed: int | None = None
+
+    @classmethod
+    def from_request(cls, req: dict, *, default_max_tokens: int = 64) -> "GenerationParams":
+        """Build from a (pre-validated) chat-completions request body."""
+        stop = req.get("stop") or ()
+        if isinstance(stop, str):
+            stop = (stop,)
+        return cls(
+            max_tokens=int(req.get("max_tokens", default_max_tokens)),
+            temperature=(float(req["temperature"]) if req.get("temperature")
+                         is not None else None),
+            top_p=float(req["top_p"]) if req.get("top_p") is not None else None,
+            stop=tuple(stop),
+            seed=int(req["seed"]) if req.get("seed") is not None else None)
+
+    @classmethod
+    def of(cls, params: "GenerationParams | dict | None", *,
+           max_tokens: int | None = None) -> "GenerationParams":
+        """Normalize the transitional call surface: an explicit params
+        object wins; a dict (the control-plane wire form) is rebuilt; a
+        bare legacy ``max_tokens`` becomes a params object."""
+        if isinstance(params, dict):
+            params = cls(**{k: (tuple(v) if k == "stop" else v)
+                            for k, v in params.items()})
+        if params is not None:
+            return params
+        return cls(max_tokens=max_tokens if max_tokens is not None else 64)
+
+    def to_dict(self) -> dict:
+        """Wire form for the control plane (plain JSON-able values)."""
+        return {"max_tokens": self.max_tokens, "temperature": self.temperature,
+                "top_p": self.top_p, "stop": list(self.stop), "seed": self.seed}
+
+    def resolve(self, sc: SamplerConfig) -> SamplerConfig:
+        """Effective sampler for this request over the engine default."""
+        return SamplerConfig(
+            temperature=(self.temperature if self.temperature is not None
+                         else sc.temperature),
+            top_k=sc.top_k,
+            top_p=self.top_p if self.top_p is not None else sc.top_p,
+            vocab_size=sc.vocab_size)
+
+
+class StopMatcher:
+    """Incremental stop-sequence matching with OpenAI semantics, shared
+    by the serial generate path and the continuous batcher.
+
+    Feed decoded token text as it is produced; ``feed`` returns the text
+    that is safe to DELIVER now. Text that could be the beginning of a
+    stop sequence is withheld until disambiguated (so a stop spanning
+    several tokens never leaks its prefix to the client), and on a match
+    the stop string and everything after it is suppressed. ``text`` is
+    the cumulative delivered text — the response body for a stopped
+    request. Call ``flush`` when the stream ends without a match to
+    release the withheld tail."""
+
+    def __init__(self, stops):
+        self.stops = tuple(s for s in stops if s)
+        self.text = ""        # delivered so far (never includes the stop)
+        self.held = ""        # possible stop prefix, pending disambiguation
+        self.stopped = False
+
+    def feed(self, token_text: str) -> str:
+        if self.stopped:
+            return ""
+        if not self.stops:
+            self.text += token_text
+            return token_text
+        buf = self.held + token_text
+        hit = min((i for i in (buf.find(s) for s in self.stops) if i >= 0),
+                  default=-1)
+        if hit >= 0:
+            deliver, self.held, self.stopped = buf[:hit], "", True
+            self.text += deliver
+            return deliver
+        # withhold the longest tail that is a proper prefix of any stop
+        hold = 0
+        for s in self.stops:
+            for k in range(min(len(s) - 1, len(buf)), hold, -1):
+                if buf.endswith(s[:k]):
+                    hold = k
+                    break
+        deliver = buf[:len(buf) - hold] if hold else buf
+        self.held = buf[len(deliver):]
+        self.text += deliver
+        return deliver
+
+    def flush(self) -> str:
+        """Stream ended without a match: the held tail is real output."""
+        deliver, self.held = self.held, ""
+        self.text += deliver
+        return deliver
+
+
+def _mask_vocab(logits, sc: SamplerConfig):
     logits = logits.astype(jnp.float32)
     if sc.vocab_size and sc.vocab_size < logits.shape[-1]:
         mask = jnp.arange(logits.shape[-1]) < sc.vocab_size
         logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _nucleus_mask(z, probs, top_p):
+    """Mask z to the smallest prob-sorted prefix with mass >= top_p.
+    ``top_p`` is (B, 1); rows with top_p >= 1 are left untouched (the
+    cumsum's float error must not drop tiny-probability tokens)."""
+    sp = jnp.sort(probs, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(sp, axis=-1)
+    keep_n = jnp.sum(cum < top_p, axis=-1, keepdims=True) + 1
+    thresh = jnp.take_along_axis(sp, keep_n - 1, axis=-1)
+    return jnp.where((top_p >= 1.0) | (probs >= thresh), z, -1e30)
+
+
+def sample(logits, rng, sc: SamplerConfig):
+    """logits (B, V) -> token ids (B,); one shared config for the batch."""
+    logits = _mask_vocab(logits, sc)
     if sc.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
-    logits = logits / sc.temperature
+    z = logits / sc.temperature
     if sc.top_k:
-        kth = jax.lax.top_k(logits, sc.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
-    return jax.random.categorical(rng, logits, axis=-1)
+        kth = jax.lax.top_k(z, sc.top_k)[0][..., -1:]
+        z = jnp.where(z < kth, -1e30, z)
+    if sc.top_p < 1.0:
+        probs = jax.nn.softmax(z, axis=-1)
+        z = _nucleus_mask(z, probs, jnp.full((z.shape[0], 1), sc.top_p))
+    return jax.random.categorical(rng, z, axis=-1)
+
+
+def sample_slots(logits, rng, sc: SamplerConfig, temps, top_ps, seeds, steps):
+    """Per-slot sampling for one fused decode tick.
+
+    logits (B, V); ``temps``/``top_ps`` (B,) float32; ``seeds``/``steps``
+    (B,) int32. A slot with ``temp <= 0`` takes argmax. ``seed >= 0``
+    draws from a deterministic per-request stream keyed on (seed, step)
+    — reproducible regardless of which other sessions share the batch;
+    ``seed < 0`` folds the slot index into the shared per-tick ``rng``.
+    Jit-friendly: everything is vectorized, no host sync.
+    """
+    logits = _mask_vocab(logits, sc)
+    greedy = jnp.argmax(logits, axis=-1)
+
+    def stochastic(_):
+        z = logits / jnp.maximum(temps, 1e-6)[:, None]
+        if sc.top_k:
+            kth = jax.lax.top_k(z, sc.top_k)[0][..., -1:]
+            z2 = jnp.where(z < kth, -1e30, z)
+        else:
+            z2 = z
+        probs = jax.nn.softmax(z2, axis=-1)
+        z2 = _nucleus_mask(z2, probs, top_ps[:, None])
+        B = logits.shape[0]
+        seeded = jax.vmap(lambda s, t: jax.random.fold_in(
+            jax.random.PRNGKey(s), t))(jnp.maximum(seeds, 0), steps)
+        shared = jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(B))
+        keys = jnp.where((seeds >= 0)[:, None], seeded, shared)
+        drawn = jax.vmap(jax.random.categorical)(keys, z2)
+        return jnp.where(temps <= 0.0, greedy, drawn)
+
+    # all-greedy batches (the default engine config) skip the sort/
+    # softmax/categorical pipeline entirely — the fused tick stays a
+    # single argmax on the hot path
+    return jax.lax.cond(jnp.any(temps > 0.0), stochastic,
+                        lambda _: greedy, None)

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import cache_axes, round_up
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import GenerationParams, StopMatcher, sample_slots
 from repro.serving.tokenizer import ByteTokenizer
 
 
@@ -78,11 +78,53 @@ class Request:
     on_token: Optional[Callable[[int, str], None]] = None
     on_done: Optional[Callable[["Request"], None]] = None
     deadline_s: float = 0.0          # 0 = none
+    params: Optional[GenerationParams] = None   # per-request sampling/stop
     submitted_at: float = field(default_factory=time.perf_counter)
     output_ids: list = field(default_factory=list)
     done: bool = False
     cancelled: bool = False
+    finish_reason: str = ""          # "stop" | "length" | "cancelled"
     error: Optional[str] = None      # set when a scheduler fault ended it
+    _stop: Optional[StopMatcher] = None
+
+    def _matcher(self) -> Optional[StopMatcher]:
+        if self._stop is None and self.params and self.params.stop:
+            self._stop = StopMatcher(self.params.stop)
+        return self._stop
+
+    def emit(self, tid: int, text: str) -> bool:
+        """Deliver one decoded token through the stop matcher. Text that
+        may begin a stop sequence is withheld until disambiguated (the
+        delivered text can therefore lag the token that produced it);
+        returns True when a stop sequence completed — the stop string
+        itself is never delivered."""
+        m = self._matcher()
+        if m is None:
+            if self.on_token:
+                self.on_token(tid, text)
+            return False
+        d = m.feed(text)
+        if d and self.on_token:
+            self.on_token(tid, d)
+        return m.stopped
+
+    def flush_stop(self, deliver: bool = True):
+        """Stream ended without a stop match: release the withheld tail
+        (it is real output) before ``on_done`` fires."""
+        m = self._stop
+        if m is None or m.stopped:
+            return
+        d = m.flush()
+        if d and deliver and self.on_token:
+            self.on_token(-1, d)
+
+    def final_text(self, tokenizer) -> str:
+        """Response text honoring stop semantics: for a stopped request
+        the text ends BEFORE the stop sequence (stream and non-stream
+        responses agree); otherwise it is the full decoded output."""
+        if self._stop is not None:
+            return self._stop.text
+        return tokenizer.decode(self.output_ids)
 
 
 @dataclass
@@ -93,6 +135,9 @@ class _Admission:
     cache: dict                      # batch=1 cache being filled
     chunks: list                     # list of equal-length token lists
     i: int = 0
+    temp: float = 0.0                # resolved per-request sampling params
+    top_p: float = 1.0
+    seed: int = -1                   # -1 -> shared per-tick rng
 
 
 class ContinuousBatcher:
@@ -121,6 +166,12 @@ class ContinuousBatcher:
         self._active_m = np.zeros(self.B, bool)
         self._gen = np.zeros(self.B, np.int32)
         self._maxgen = np.full(self.B, 1, np.int32)
+        # per-slot generation params (GenerationParams resolved against
+        # the engine's SamplerConfig at admission time)
+        sc = engine.sampler
+        self._temp = np.full(self.B, sc.temperature, np.float32)
+        self._topp = np.full(self.B, sc.top_p, np.float32)
+        self._seed = np.full(self.B, -1, np.int32)
 
         self._prefill = jax.jit(self.model.prefill_chunk)
         self._fused = jax.jit(self._make_fused())
@@ -134,7 +185,10 @@ class ContinuousBatcher:
         """One tick: decode all slots, sample, mask EOS/length per slot.
 
         Inputs beyond params/tok/cache are the per-slot state vectors:
-        active, gen (tokens produced, incl. the prefill token), max_gen.
+        active, gen (tokens produced, incl. the prefill token), max_gen,
+        and the per-slot sampling params temp/top_p/seed (each request in
+        the shared batch samples with its own GenerationParams; ``gen``
+        doubles as the per-request sample-stream step for seeded slots).
         Returns the next tok buffer, the cache, and a packed (B, 3)
         int32 [next, emitted, done] — the tick's single token transfer.
         (An admission's prefill token is emitted at admission time; see
@@ -143,10 +197,11 @@ class ContinuousBatcher:
         model, sampler = self.model, self.engine.sampler
         eos, pad = self.tokenizer.eos_id, self.tokenizer.pad_id
 
-        def fused(params, tok, cache, active, gen, max_gen, rng):
+        def fused(params, tok, cache, active, gen, max_gen, temp, top_p,
+                  seed, rng):
             run = active
             logits, cache = model.decode_step(params, tok, cache)
-            nxt = sample(logits, rng, sampler)
+            nxt = sample_slots(logits, rng, sampler, temp, top_p, seed, gen)
             nxt = jnp.where(run, nxt, pad).astype(jnp.int32)
             gen2 = gen + run.astype(gen.dtype)
             done_now = run & ((nxt == eos) | (gen2 >= max_gen))
@@ -163,11 +218,16 @@ class ContinuousBatcher:
 
     def _make_first(self):
         """Sample an admission's first token from its prefill logits and
-        drop it into the tok buffer — device-side, no host read."""
+        drop it into the tok buffer — device-side, no host read. Uses the
+        admission's own params (step 0 of its sample stream)."""
         sampler = self.engine.sampler
 
-        def first(tok, logits, slot, rng):
-            t = sample(logits, rng, sampler).astype(tok.dtype)
+        def first(tok, logits, slot, rng, temp, top_p, seed):
+            t = sample_slots(logits, rng, sampler,
+                             jnp.full((1,), temp, jnp.float32),
+                             jnp.full((1,), top_p, jnp.float32),
+                             jnp.full((1,), seed, jnp.int32),
+                             jnp.zeros((1,), jnp.int32)).astype(tok.dtype)
             return jax.lax.dynamic_update_slice(tok, t[:, None], (slot, 0))
 
         return first
@@ -232,6 +292,7 @@ class ContinuousBatcher:
                     return True
             return False
         req.done, req.cancelled = True, True
+        req.finish_reason = "cancelled"
         if req.on_done:
             req.on_done(req)
         return True
@@ -255,6 +316,7 @@ class ContinuousBatcher:
                 cand = self.queue.pop(0)
                 if cand.deadline_s and (now - cand.submitted_at) > cand.deadline_s:
                     cand.done, cand.cancelled = True, True
+                    cand.finish_reason = "cancelled"
                     if cand.on_done:
                         cand.on_done(cand)
                     continue
@@ -277,9 +339,18 @@ class ContinuousBatcher:
             if b % size:             # bucket capped at max_seq-1: one chunk
                 size = b
             one = self.model.init_cache(1, self.max_seq)
-            self._adm = _Admission(req=req, slot=slot, cache=one,
-                                   chunks=[ids[i:i + size]
-                                           for i in range(0, b, size)])
+            p, sc = req.params, self.engine.sampler
+            self._adm = _Admission(
+                req=req, slot=slot, cache=one,
+                chunks=[ids[i:i + size] for i in range(0, b, size)],
+                temp=(p.temperature if p and p.temperature is not None
+                      else sc.temperature),
+                top_p=p.top_p if p and p.top_p is not None else sc.top_p,
+                # mask to int32: the gateway 400s oversized seeds, but a
+                # programmatic submit() must not be able to fault the
+                # SHARED batch (an OverflowError in the jitted step would
+                # cancel every in-flight session)
+                seed=(p.seed & 0x7FFFFFFF) if p and p.seed is not None else -1)
         adm = self._adm
         chunk = jnp.asarray([adm.chunks[adm.i]], jnp.int32)
         logits, adm.cache = self._prefill(self.engine.params, chunk, adm.cache)
@@ -294,15 +365,24 @@ class ContinuousBatcher:
         slot, req = adm.slot, adm.req
         slot_arr = jnp.asarray(slot, jnp.int32)
         self.engine.rng, k = jax.random.split(self.engine.rng)
-        self.tok = self._first(self.tok, logits, slot_arr, k)
+        self.tok = self._first(self.tok, logits, slot_arr, k,
+                               adm.temp, adm.top_p, adm.seed)
         self._adm = None
         first = int(self.tok[slot, 0])
         self.adm_transfers += 1
         req.output_ids.append(first)
-        if req.on_token:
-            req.on_token(first, self.tokenizer.decode_token(first))
-        if first == self.tokenizer.eos_id or req.max_new_tokens <= 1:
+        stopped = req.emit(first, self.tokenizer.decode_token(first))
+        # the emission just woke the session's consumer thread (gateway
+        # SSE queue, relay producer); offer the GIL before paying the
+        # splice below, or the consumer's TTFT silently re-absorbs the
+        # splice + first fused tick this emission was moved ahead of
+        time.sleep(0)
+        if stopped or first == self.tokenizer.eos_id or req.max_new_tokens <= 1:
             req.done = True          # ended on its prefill token
+            req.finish_reason = ("length" if (not stopped and
+                                              first != self.tokenizer.eos_id)
+                                 else "stop")
+            req.flush_stop()
             if req.on_done:
                 req.on_done(req)
             return
@@ -313,6 +393,9 @@ class ContinuousBatcher:
         self._active_m[slot] = True
         self._gen[slot] = 1          # the prefill token counts
         self._maxgen[slot] = req.max_new_tokens
+        self._temp[slot] = adm.temp
+        self._topp[slot] = adm.top_p
+        self._seed[slot] = adm.seed
 
     # ------------------------------------------------------------ tick
     def _finish(self, slot: int, cancelled=False):
@@ -320,6 +403,12 @@ class ContinuousBatcher:
         if req is None:
             return
         req.done, req.cancelled = True, cancelled
+        if cancelled:
+            req.finish_reason = "cancelled"
+        elif not req.finish_reason:
+            req.finish_reason = ("length" if self._gen[slot] >= self._maxgen[slot]
+                                 else "stop")
+        req.flush_stop(deliver=not cancelled)
         if req.on_done:
             req.on_done(req)
         self.active[slot] = None
@@ -351,7 +440,8 @@ class ContinuousBatcher:
         self.engine.rng, k = jax.random.split(self.engine.rng)
         self.tok, self.cache, packed = self._fused(
             self.engine.params, self.tok, self.cache,
-            self._active_m, self._gen, self._maxgen, k)
+            self._active_m, self._gen, self._maxgen,
+            self._temp, self._topp, self._seed, k)
         packed = np.asarray(packed)  # the tick's one token transfer
         self.transfers += 1
         now = time.perf_counter()
@@ -362,8 +452,12 @@ class ContinuousBatcher:
             if emitted:
                 req.output_ids.append(nxt)
                 self._gen[slot] += 1
-                if req.on_token:
-                    req.on_token(nxt, self.tokenizer.decode_token(nxt))
+                if req.emit(nxt, self.tokenizer.decode_token(nxt)):
+                    # a stop sequence completed: it (and anything after
+                    # it) is recorded in output_ids but never delivered
+                    req.finish_reason = "stop"
+                    self._finish(slot)
+                    continue
             over = req.deadline_s and (now - req.submitted_at) > req.deadline_s
             if done or over:
                 self._finish(slot, cancelled=bool(over))

@@ -1,0 +1,461 @@
+"""StreamGateway: golden SSE wire format, middleware (auth / rate limit
+/ validation / audit), model-alias routing, the GenerationParams
+contract, duplicate-safe mid-stream fallback, and the deprecated
+HPCAsAPIProxy shim. Backends here are pure-Python fakes — these tests
+pin the API surface, not the engine (test_system covers the gateway
+over the real engine)."""
+
+import json
+import threading
+
+import pytest
+
+from repro.core.auth import (ApiKeyStore, DualAuthenticator, GlobusAuthService,
+                             SlidingWindowRateLimiter)
+from repro.core.gateway import (DEFAULT_ALIASES, StreamGateway, ValidationError,
+                                validate_chat_request)
+from repro.core.handler import StreamingHandler
+from repro.core.judge import KeywordJudge
+from repro.core.metrics import UsageTracker
+from repro.core.proxy import HPCAsAPIProxy, ProxyResponse
+from repro.core.router import TierRouter
+from repro.core.sse import parse_sse
+from repro.core.summarizer import SummarizerPolicy, TierAwareSummarizer
+from repro.core.tiers import BackendError, TierBackend, TierResult, TierSpec
+from repro.serving.sampler import GenerationParams
+
+
+class FakeBackend:
+    """Scripted tier backend implementing the TierBackend protocol."""
+
+    def __init__(self, name, tokens, *, fail_after=None, healthy=True,
+                 cost_usd=0.0):
+        self.spec = TierSpec(name, f"fake-{name}", 4096)
+        self.tokens = list(tokens)
+        self.fail_after = fail_after      # raise after emitting this many
+        self.healthy = healthy
+        self.cost_usd = cost_usd
+        self.calls = 0
+
+    def health_check(self):
+        return self.healthy
+
+    def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
+               cancel_event=None):
+        self.calls += 1
+        gp = GenerationParams.of(params, max_tokens=max_tokens)
+        emit = self.tokens[:gp.max_tokens]
+        for i, t in enumerate(emit):
+            if self.fail_after is not None and i >= self.fail_after:
+                raise BackendError(f"{self.spec.name} died mid-stream")
+            if on_token:
+                on_token(i, t)
+        return TierResult(
+            tier=self.spec.name, model=self.spec.model_name,
+            text="".join(emit), n_prompt_tokens=7,
+            n_completion_tokens=len(emit), ttft_s=0.001, total_s=0.01,
+            tok_per_s=100.0, cost_usd=self.cost_usd, streamed=True,
+            finish_reason="length" if len(emit) >= gp.max_tokens else "stop")
+
+
+def make_gateway(*, backends=None, rate_limit=1000, **gw_kwargs):
+    backends = backends or {
+        "local": FakeBackend("local", ["L0 ", "L1 ", "L2 ", "L3 ", "L4 "]),
+        "hpc": FakeBackend("hpc", ["H0 ", "H1 ", "H2 ", "H3 ", "H4 "]),
+        "cloud": FakeBackend("cloud", ["C0 ", "C1 ", "C2 ", "C3 ", "C4 "],
+                             cost_usd=0.01),
+    }
+    router = TierRouter(backends, KeywordJudge())
+    pol = {t: SummarizerPolicy(context_window=4096, summary_budget=256,
+                               keep_turn_pairs=2) for t in backends}
+    handler = StreamingHandler(router, TierAwareSummarizer(pol), UsageTracker())
+    globus = GlobusAuthService()
+    auth = DualAuthenticator(globus, ApiKeyStore())
+    gw = StreamGateway(handler, auth,
+                       SlidingWindowRateLimiter(max_requests=rate_limit),
+                       **gw_kwargs)
+    token = globus.issue_token("tester@uic.edu")
+    return gw, token, backends
+
+
+def chat(gw, token, **over):
+    req = {"messages": [{"role": "user", "content": "hello there"}],
+           "max_tokens": 3, "stream": True}
+    req.update(over)
+    return gw.handle_chat_completions(req, bearer=token)
+
+
+# ---------------------------------------------------------------- wire format
+def test_sse_golden_stream_shape():
+    """The full frame sequence of a streamed completion: role-priming
+    chunk, one content chunk per token, finish chunk, usage chunk (when
+    requested), [DONE] — with OpenAI field shapes throughout."""
+    gw, token, _ = make_gateway()
+    resp = chat(gw, token, model="stream-local", max_tokens=3,
+                stream_options={"include_usage": True})
+    assert resp.status == 200
+    assert resp.headers["content-type"] == "text/event-stream"
+    frames = list(resp.stream)
+    assert all(f.startswith("data: ") and f.endswith("\n\n") for f in frames)
+    assert frames[-1] == "data: [DONE]\n\n"
+
+    chunks = [json.loads(f[len("data: "):]) for f in frames[:-1]]
+    for c in chunks:
+        assert c["object"] == "chat.completion.chunk"
+        assert c["id"].startswith("chatcmpl-")
+        assert c["model"] == "stream-local"
+        assert isinstance(c["created"], int)
+
+    role, *content, finish, usage = chunks
+    assert role["choices"][0]["delta"] == {"role": "assistant"}
+    assert role["choices"][0]["finish_reason"] is None
+    assert [c["choices"][0]["delta"]["content"] for c in content] == \
+        ["L0 ", "L1 ", "L2 "]
+    assert finish["choices"][0]["delta"] == {}
+    assert finish["choices"][0]["finish_reason"] == "length"
+    # usage chunk: empty choices + totals + routing metadata
+    assert usage["choices"] == []
+    assert usage["usage"]["completion_tokens"] == 3
+    assert usage["usage"]["total_tokens"] == usage["usage"]["prompt_tokens"] + 3
+    assert usage["stream"]["tier"] == "local"
+    assert usage["stream"]["fallback_depth"] == 0
+
+
+def test_sse_error_frame_after_tokens():
+    """Total pipeline failure after first emission surfaces as an in-band
+    SSE error frame (the stream already started), then [DONE]."""
+    backends = {"local": FakeBackend("local", ["L0 ", "L1 "], fail_after=1),
+                "hpc": FakeBackend("hpc", ["H0 "], fail_after=0),
+                "cloud": FakeBackend("cloud", ["C0 "], fail_after=0)}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local", max_tokens=4)
+    assert resp.status == 200
+    frames = list(resp.stream)
+    chunks = [json.loads(f[len("data: "):]) for f in frames[:-1]]
+    assert "error" in chunks[-1]
+    assert chunks[-1]["error"]["type"] == "upstream_error"
+    assert frames[-1] == "data: [DONE]\n\n"
+
+
+def test_failure_before_first_token_returns_json_502():
+    backends = {"local": FakeBackend("local", ["x"], fail_after=0),
+                "hpc": FakeBackend("hpc", ["x"], fail_after=0),
+                "cloud": FakeBackend("cloud", ["x"], fail_after=0)}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local")
+    assert resp.status == 502
+    assert resp.body["error"]["type"] == "upstream_error"
+    assert resp.stream is None
+
+
+def test_non_stream_completion_shape_and_headers():
+    gw, token, _ = make_gateway()
+    resp = chat(gw, token, model="stream-hpc", stream=False, max_tokens=2)
+    assert resp.status == 200
+    body = resp.body
+    assert body["object"] == "chat.completion"
+    assert body["choices"][0]["message"]["role"] == "assistant"
+    assert body["choices"][0]["message"]["content"] == "H0 H1 "
+    assert body["choices"][0]["finish_reason"] == "length"
+    assert body["usage"]["completion_tokens"] == 2
+    assert body["stream"]["tier"] == "hpc"
+    assert resp.headers["x-stream-tier"] == "hpc"
+    assert resp.headers["x-stream-fallback-depth"] == "0"
+    assert resp.headers["x-stream-cost-usd"] == "0.000000"
+
+
+# ------------------------------------------------------------- alias routing
+def test_alias_table_pins_each_tier():
+    gw, token, backends = make_gateway()
+    for alias, tier in (("stream-local", "local"), ("stream-hpc", "hpc"),
+                        ("stream-cloud", "cloud")):
+        resp = chat(gw, token, model=alias)
+        list(resp.stream)
+        assert resp.headers["x-stream-tier"] == tier, alias
+    assert all(b.calls == 1 for b in backends.values())
+
+
+def test_stream_auto_is_judge_routed():
+    gw, token, backends = make_gateway()
+    resp = chat(gw, token, model="stream-auto",
+                messages=[{"role": "user", "content":
+                           "What is the capital of France?"}])
+    list(resp.stream)
+    assert resp.headers["x-stream-tier"] == "local"       # LOW -> local
+    assert resp.headers["x-stream-complexity"] == "LOW"
+    resp = chat(gw, token, model="stream-auto",
+                messages=[{"role": "user", "content":
+                           "Prove, from first principles, a novel convergence "
+                           "theorem and critique the assumptions in depth."}])
+    list(resp.stream)
+    assert resp.headers["x-stream-tier"] == "cloud"       # HIGH -> cloud
+    assert resp.headers["x-stream-complexity"] == "HIGH"
+
+
+def test_unknown_model_404_model_not_found():
+    gw, token, _ = make_gateway()
+    resp = chat(gw, token, model="gpt-4o")
+    assert resp.status == 404
+    assert resp.body["error"]["code"] == "model_not_found"
+    assert resp.body["error"]["type"] == "invalid_request_error"
+    assert "gpt-4o" in resp.body["error"]["message"]
+
+
+def test_models_listing():
+    gw, token, _ = make_gateway()
+    resp = gw.handle_models(bearer=token)
+    assert resp.status == 200 and resp.body["object"] == "list"
+    ids = [d["id"] for d in resp.body["data"]]
+    for alias in DEFAULT_ALIASES:
+        assert alias in ids
+    pinned = {d["id"]: d for d in resp.body["data"]}["stream-hpc"]
+    assert pinned["metadata"]["tier"] == "hpc"
+    assert pinned["metadata"]["backend_model"] == "fake-hpc"
+    assert gw.handle_models(bearer="nonsense").status == 401
+
+
+# ---------------------------------------------------------------- middleware
+def test_auth_required_and_rate_limit_retry_after():
+    gw, token, backends = make_gateway(rate_limit=2)
+    assert chat(gw, "bad-token").status == 401
+    assert backends["local"].calls == 0                   # nothing dispatched
+    r1, r2 = chat(gw, token), chat(gw, token)
+    list(r1.stream), list(r2.stream)
+    r3 = chat(gw, token)
+    assert r3.status == 429
+    assert r3.body["error"]["type"] == "rate_limit_exceeded"
+    assert int(r3.headers["retry-after"]) >= 1            # from window state
+
+
+def test_audit_log_is_bounded_and_content_free():
+    gw, token, _ = make_gateway(audit_maxlen=5)
+    secret = "VERY_PRIVATE_PROMPT_CONTENT"
+    for _ in range(9):
+        list(chat(gw, token, messages=[{"role": "user", "content": secret}],
+                  model="stream-local").stream)
+    assert len(gw.audit_log) == 5                         # deque maxlen
+    blob = json.dumps(list(gw.audit_log))
+    assert secret not in blob
+    assert "tester@uic.edu" in blob
+    assert all(e["model"] == "stream-local" for e in gw.audit_log
+               if e["note"] == "accepted")
+
+
+@pytest.mark.parametrize("bad", [
+    {"temperature": "hot"}, {"temperature": True}, {"temperature": 3.5},
+    {"top_p": 0.0}, {"top_p": 1.5}, {"top_p": []},
+    {"stream": "yes"},
+    {"stop": 42}, {"stop": ["a", "b", "c", "d", "e"]}, {"stop": [""]},
+    {"seed": -1}, {"seed": 1.5}, {"seed": 2**31},
+    {"temperature": float("nan")}, {"top_p": float("nan")},
+    {"stream_options": "usage"}, {"stream_options": {"include_usage": "y"}},
+    {"model": 17},
+    {"max_tokens": True},
+])
+def test_validation_returns_400_not_500(bad):
+    gw, token, backends = make_gateway()
+    resp = chat(gw, token, **bad)
+    assert resp.status == 400, bad
+    assert resp.body["error"]["type"] == "invalid_request_error"
+    assert backends["local"].calls == 0                   # never dispatched
+
+
+def test_validate_chat_request_accepts_full_contract():
+    validate_chat_request({
+        "model": "stream-auto", "stream": False, "temperature": 0.7,
+        "top_p": 0.95, "seed": 11, "stop": ["\n\n", "END"],
+        "stream_options": {"include_usage": True},
+        "messages": [{"role": "user", "content": "hi"}], "max_tokens": 16})
+    with pytest.raises(ValidationError):
+        validate_chat_request({"messages": []})
+
+
+# ----------------------------------------------------- params + fallback
+def test_generation_params_reach_the_backend():
+    seen = {}
+
+    class Spy(FakeBackend):
+        def stream(self, messages, *, params=None, **kw):
+            seen["params"] = params
+            return super().stream(messages, params=params, **kw)
+
+    backends = {"local": Spy("local", ["a ", "b ", "c "]),
+                "hpc": FakeBackend("hpc", ["h "]),
+                "cloud": FakeBackend("cloud", ["c "])}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local", max_tokens=2,
+                temperature=0.5, top_p=0.9, seed=7, stop=["END"])
+    list(resp.stream)
+    p = seen["params"]
+    assert p == GenerationParams(max_tokens=2, temperature=0.5, top_p=0.9,
+                                 stop=("END",), seed=7)
+
+
+def test_mid_stream_fallback_does_not_replay_prefix():
+    """The satellite fix: local dies after 2 tokens; hpc re-generates
+    from scratch, but the client must see hpc's stream RESUME at index 2
+    — never the prefix twice."""
+    backends = {"local": FakeBackend("local", ["L0 ", "L1 ", "L2 ", "L3 "],
+                                     fail_after=2),
+                "hpc": FakeBackend("hpc", ["H0 ", "H1 ", "H2 ", "H3 "]),
+                "cloud": FakeBackend("cloud", ["C0 "])}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local", max_tokens=4,
+                stream_options={"include_usage": True})
+    frames = list(resp.stream)
+    chunks = [json.loads(f[len("data: "):]) for f in frames[:-1]]
+    content = [c["choices"][0]["delta"]["content"] for c in chunks
+               if c.get("choices") and "content" in c["choices"][0]["delta"]]
+    assert content == ["L0 ", "L1 ", "H2 ", "H3 "]        # resumed, no replay
+    usage = chunks[-1]
+    assert usage["stream"]["tier"] == "hpc"
+    assert usage["stream"]["fallback_depth"] == 1
+    assert usage["stream"]["resumed_tokens"] == 2
+
+
+def test_handler_fallback_before_first_token_is_clean():
+    """Failure BEFORE any emission falls back with no suppression."""
+    backends = {"local": FakeBackend("local", ["L0 "], fail_after=0),
+                "hpc": FakeBackend("hpc", ["H0 ", "H1 "]),
+                "cloud": FakeBackend("cloud", ["C0 "])}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local", max_tokens=2)
+    frames = list(resp.stream)
+    chunks = [json.loads(f[len("data: "):]) for f in frames[:-1]]
+    content = [c["choices"][0]["delta"]["content"] for c in chunks
+               if c.get("choices") and "content" in c["choices"][0]["delta"]]
+    assert content == ["H0 ", "H1 "]
+    assert resp.headers["x-stream-tier"] == "hpc"
+
+
+def test_client_disconnect_sets_cancel_event():
+    """Closing the SSE generator mid-stream cancels the session."""
+    release = threading.Event()
+    cancelled = {}
+
+    class Slow(FakeBackend):
+        def stream(self, messages, *, params=None, max_tokens=None,
+                   on_token=None, cancel_event=None):
+            on_token(0, "t0 ")
+            release.wait(5)
+            cancelled["set"] = cancel_event.is_set()
+            return super().stream(messages, params=params, on_token=None,
+                                  cancel_event=cancel_event)
+
+    backends = {"local": Slow("local", ["t0 "]),
+                "hpc": FakeBackend("hpc", ["h "]),
+                "cloud": FakeBackend("cloud", ["c "])}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local")
+    it = resp.stream
+    assert "assistant" in next(it)
+    assert "t0" in next(it)
+    it.close()                                            # client disconnect
+    release.set()
+    import time
+    for _ in range(50):
+        if "set" in cancelled:
+            break
+        time.sleep(0.02)
+    assert cancelled.get("set") is True
+
+
+# ----------------------------------------------------------------- shim
+def test_hpc_as_api_proxy_shim_keeps_old_call_surface():
+    """Old HPCAsAPIProxy callers — constructor, handle_chat_completions,
+    ProxyResponse fields, audit_log — keep working over the gateway."""
+    backend = FakeBackend("hpc", ["H0 ", "H1 ", "H2 "])
+    globus = GlobusAuthService()
+    proxy = HPCAsAPIProxy(backend, DualAuthenticator(globus, ApiKeyStore()),
+                          SlidingWindowRateLimiter(max_requests=100))
+    token = globus.issue_token("old-caller@uic.edu")
+
+    # streaming, old default model (the backend's model name), old frames
+    resp = proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "hi"}], "max_tokens": 2,
+         "stream": True}, bearer=token)
+    assert isinstance(resp, ProxyResponse) and resp.status == 200
+    chunks = parse_sse("".join(resp.stream))
+    assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
+    assert chunks[0]["model"] == "fake-hpc"
+    assert chunks[-1]["choices"][0]["finish_reason"] in ("stop", "length")
+    assert len(chunks) == 2 + 2
+
+    # arbitrary model strings are still accepted (pre-gateway leniency)
+    resp = proxy.handle_chat_completions(
+        {"model": "qwen-whatever",
+         "messages": [{"role": "user", "content": "x"}], "max_tokens": 1,
+         "stream": False}, bearer=token)
+    assert resp.status == 200
+    assert resp.body["model"] == "qwen-whatever"
+
+    # auth + validation still rejected up front, audit still identity-only
+    assert proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "x"}]},
+        bearer="junk").status == 401
+    assert proxy.handle_chat_completions(
+        {"messages": []}, bearer=token).status == 400
+    assert any(e["caller"] == "old-caller@uic.edu" for e in proxy.audit_log)
+
+
+def test_shim_audit_log_is_a_sliceable_list():
+    """Old callers sliced and json.dumps'ed proxy.audit_log; the shim
+    must keep that working over the gateway's bounded deque."""
+    backend = FakeBackend("hpc", ["H0 "])
+    globus = GlobusAuthService()
+    proxy = HPCAsAPIProxy(backend, DualAuthenticator(globus, ApiKeyStore()))
+    token = globus.issue_token("slicer@uic.edu")
+    for _ in range(3):
+        proxy.handle_chat_completions(
+            {"messages": [{"role": "user", "content": "x"}], "max_tokens": 1,
+             "stream": False}, bearer=token)
+    assert isinstance(proxy.audit_log, list)
+    assert len(proxy.audit_log[-2:]) == 2                 # slicing works
+    json.dumps(proxy.audit_log)                           # and serializing
+
+
+def test_local_backend_broker_fault_raises_backend_error():
+    """A session the BROKER cancelled (scheduler fault, dead callback)
+    must raise BackendError — triggering tier fallback — not return a
+    truncated success; a CALLER-initiated cancel still returns."""
+    from repro.core.tiers import LocalBackend
+    from repro.serving.broker import SessionResult
+
+    res = SessionResult(tokens=[1], text="partial", ttft_s=0.001,
+                        total_s=0.01, tok_per_s=1.0, n_prompt=1,
+                        n_generated=1, cancelled=True,
+                        finish_reason="cancelled",
+                        error="RuntimeError: injected device fault")
+
+    class FakeHandle:
+        def result(self, timeout=None):
+            return res
+
+        def cancel(self):
+            pass
+
+    class FakeEngine:
+        def submit(self, prompt, **kw):
+            return FakeHandle()
+
+    b = LocalBackend(TierSpec("local", "fake-local", 4096), FakeEngine())
+    msgs = [{"role": "user", "content": "x"}]
+    with pytest.raises(BackendError, match="injected device fault"):
+        b.stream(msgs, max_tokens=4)
+    ev = threading.Event()
+    ev.set()                                              # caller cancelled
+    r = b.stream(msgs, max_tokens=4, cancel_event=ev)
+    assert r.error == "cancelled" and r.finish_reason == "cancelled"
+
+
+def test_shim_requests_never_leave_the_pinned_tier():
+    backend = FakeBackend("hpc", ["H0 "])
+    globus = GlobusAuthService()
+    proxy = HPCAsAPIProxy(backend, DualAuthenticator(globus, ApiKeyStore()))
+    token = globus.issue_token("pin@uic.edu")
+    resp = proxy.handle_chat_completions(
+        {"messages": [{"role": "user", "content": "route me"}],
+         "max_tokens": 1, "stream": False}, bearer=token)
+    assert resp.status == 200
+    assert resp.headers["x-stream-tier"] == "hpc"
+    assert backend.calls == 1

@@ -56,6 +56,17 @@ def test_rate_limiter_sliding_window():
     assert rl.allow("a", now=now + 11)          # window slid
 
 
+def test_rate_limiter_retry_after_from_window_state():
+    rl = SlidingWindowRateLimiter(max_requests=2, window_s=10.0)
+    assert rl.retry_after("a", now=100.0) == 0.0       # no events yet
+    rl.allow("a", now=100.0)
+    assert rl.retry_after("a", now=101.0) == 0.0       # still under limit
+    rl.allow("a", now=103.0)
+    # saturated: oldest event (t=100) leaves the window at t=110
+    assert rl.retry_after("a", now=104.0) == pytest.approx(6.0)
+    assert rl.retry_after("a", now=111.0) == 0.0       # already expired
+
+
 def test_request_validation():
     validate_chat_request({"messages": [{"role": "user", "content": "hi"}]})
     with pytest.raises(ValidationError):
@@ -69,3 +80,16 @@ def test_request_validation():
                                "max_tokens": 0})
     with pytest.raises(ValidationError):
         validate_chat_request({"messages": [{"role": "user", "content": "y" * 100000}]})
+
+
+def test_request_validation_generation_params_typed():
+    """Malformed sampling params must 400 at the gate, not 500 deep in
+    the engine (the gateway's type-checked contract; full matrix in
+    tests/test_gateway.py)."""
+    base = {"messages": [{"role": "user", "content": "hi"}]}
+    validate_chat_request({**base, "temperature": 1.0, "top_p": 0.5,
+                           "seed": 0, "stop": "\n", "stream": True})
+    for bad in ({"temperature": "x"}, {"top_p": 2.0}, {"stream": 1},
+                {"seed": False}, {"stop": [3]}):
+        with pytest.raises(ValidationError):
+            validate_chat_request({**base, **bad})

@@ -184,3 +184,85 @@ def test_generate_batch_uses_sampler_for_first_token():
     e.rng = jax.random.PRNGKey(7)
     _, outs = e.generate_batch(["same seed"], max_new_tokens=5)
     assert outs[0] == solo.tokens
+
+
+# --------------------------------------------------- GenerationParams contract
+def test_params_seeded_stream_is_reproducible(engine):
+    """A seeded request draws the same tokens every run — serial path and
+    broker path alike — regardless of batch composition."""
+    from repro.serving import GenerationParams
+    p = GenerationParams(max_tokens=6, temperature=0.9, seed=123)
+    serial = engine.generate("seeded prompt", params=p).tokens
+    assert engine.generate("seeded prompt", params=p).tokens == serial
+    # broker path, with an unrelated session sharing the batch
+    other = engine.submit("bystander session", max_new_tokens=6)
+    got = engine.submit("seeded prompt", params=p).result(timeout=60)
+    other.result(timeout=60)
+    assert got.tokens == serial
+
+
+def test_stop_matcher_holds_back_prefixes():
+    """OpenAI stop semantics, incrementally: a stop spanning tokens never
+    leaks its prefix; an unconsummated prefix is flushed at stream end;
+    delivered text always ends before the stop."""
+    from repro.serving.sampler import StopMatcher
+    m = StopMatcher(("\n\n",))
+    assert m.feed("hello") == "hello"
+    assert m.feed("\n") == ""                   # could start the stop: held
+    assert m.feed("world") == "\nworld"         # disambiguated: released
+    assert m.feed("\n") == ""
+    assert m.feed("\n") == "" and m.stopped     # match across two tokens
+    assert m.text == "hello\nworld"             # stop never in the text
+    assert m.feed("after") == ""                # nothing after a stop
+
+    m2 = StopMatcher(("END",))
+    assert m2.feed("abcE") == "abc"
+    assert m2.feed("N") == ""                   # "EN" still a live prefix
+    assert m2.flush() == "EN"                   # stream ended without match
+    assert m2.text == "abcEN" and not m2.stopped
+
+    m3 = StopMatcher(("X",))
+    assert m3.feed("abXcd") == "ab" and m3.stopped  # mid-token match
+    assert m3.text == "ab"
+
+
+def test_params_stop_string_ends_generation(engine):
+    """A stop string terminates the stream with finish_reason='stop';
+    neither the delivered stream nor the final text contains it."""
+    from repro.serving import GenerationParams
+    full = engine.generate("stop contract", max_new_tokens=12)
+    assert full.finish_reason == "length"
+    text = full.text
+    cut = len(text) // 2
+    stop_s = text[cut:cut + 2]
+    seen = []
+    r = engine.submit("stop contract",
+                      params=GenerationParams(max_tokens=12, stop=(stop_s,)),
+                      on_token=lambda t, s: seen.append(s)).result(timeout=60)
+    assert r.finish_reason == "stop"
+    assert stop_s not in "".join(seen)          # stop text never delivered
+    assert stop_s not in r.text                 # nor in the response body
+    assert r.text == "".join(seen)              # stream == non-stream text
+    # the serial path implements the same contract
+    g = engine.generate("stop contract",
+                        params=GenerationParams(max_tokens=12, stop=(stop_s,)))
+    assert g.finish_reason == "stop" and stop_s not in g.text
+
+
+def test_params_per_slot_temperature_in_one_batch(engine):
+    """One shared batch serves a greedy request and a hot-temperature
+    request at once; the greedy one still matches solo greedy decoding."""
+    from repro.serving import GenerationParams
+    want = engine.generate("greedy alongside hot", max_new_tokens=6).tokens
+    hot = engine.submit("hot request", params=GenerationParams(
+        max_tokens=6, temperature=1.2, seed=5))
+    cold = engine.submit("greedy alongside hot", max_new_tokens=6)
+    assert cold.result(timeout=60).tokens == want
+    hot.result(timeout=60)
+
+
+def test_params_max_tokens_finish_reason(engine):
+    from repro.serving import GenerationParams
+    r = engine.submit("finish by budget", params=GenerationParams(
+        max_tokens=3)).result(timeout=60)
+    assert r.n_generated == 3 and r.finish_reason == "length"

@@ -69,7 +69,8 @@ def test_proxy_stream_openai_format(system):
     chunks = parse_sse("".join(resp.stream))
     assert chunks[0]["object"] == "chat.completion.chunk"
     assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
-    assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
+    # OpenAI semantics: "length" when max_tokens ended generation
+    assert chunks[-1]["choices"][0]["finish_reason"] in ("stop", "length")
 
 
 def test_proxy_concurrent_sessions_interleave(system):
@@ -97,7 +98,7 @@ def test_proxy_concurrent_sessions_interleave(system):
     for status, chunks in out:
         assert status == 200
         assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
-        assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
+        assert chunks[-1]["choices"][0]["finish_reason"] in ("stop", "length")
         # one content frame per emitted token (role + finish bracket them)
         assert len(chunks) == toks + 2
 
@@ -127,7 +128,7 @@ def test_audit_log_has_no_content(system):
     system.proxy.handle_chat_completions(
         {"messages": [{"role": "user", "content": secret_text}], "max_tokens": 4,
          "stream": False}, bearer=tok)
-    assert secret_text not in json.dumps(system.proxy.audit_log)
+    assert secret_text not in json.dumps(list(system.proxy.audit_log))
     assert secret_text not in json.dumps(
         [r.__dict__ for r in system.tracker.records()], default=str)
 
@@ -144,3 +145,69 @@ def test_usage_tracking_and_cost(system):
     summary = system.tracker.summary()
     assert summary["n_requests"] >= 1
     assert "local" in summary["by_tier"]
+
+
+def test_gateway_stream_auto_judge_routed(system):
+    """Acceptance: a stream-auto request is judge-routed through the full
+    pipeline, with the tier visible in x-stream-tier AND the usage chunk."""
+    tok = system.globus.issue_token("gw@uic.edu")
+    resp = system.gateway.handle_chat_completions(
+        {"model": "stream-auto",
+         "messages": [{"role": "user", "content": "What is the capital of France?"}],
+         "max_tokens": 5, "stream": True,
+         "stream_options": {"include_usage": True}}, bearer=tok)
+    assert resp.status == 200
+    chunks = parse_sse("".join(resp.stream))
+    assert resp.headers["x-stream-tier"] == "local"        # LOW -> local
+    assert resp.headers["x-stream-complexity"] == "LOW"
+    usage = chunks[-1]
+    assert usage["choices"] == [] and usage["usage"]["completion_tokens"] == 5
+    assert usage["stream"]["tier"] == "local"
+    assert usage["stream"]["fallback_depth"] == 0
+
+
+def test_gateway_alias_hits_each_tier(system):
+    """Acceptance: each stream-<tier> alias dispatches to its tier (real
+    engines underneath: local broker, dual-channel HPC, cloud sim)."""
+    tok = system.globus.issue_token("gw2@uic.edu")
+    for alias, tier in (("stream-local", "local"), ("stream-hpc", "hpc"),
+                        ("stream-cloud", "cloud")):
+        resp = system.gateway.handle_chat_completions(
+            {"model": alias, "messages": [{"role": "user", "content": "ping"}],
+             "max_tokens": 4, "stream": True}, bearer=tok)
+        chunks = parse_sse("".join(resp.stream))
+        assert resp.status == 200
+        assert resp.headers["x-stream-tier"] == tier, alias
+        content = [c["choices"][0]["delta"].get("content", "")
+                   for c in chunks if c.get("choices")]
+        assert sum(1 for c in content if c) == 4            # one frame/token
+
+
+def test_gateway_non_stream_metadata_headers(system):
+    tok = system.globus.issue_token("gw3@uic.edu")
+    resp = system.gateway.handle_chat_completions(
+        {"model": "stream-cloud",
+         "messages": [{"role": "user", "content": "cost check"}],
+         "max_tokens": 4, "stream": False}, bearer=tok)
+    assert resp.status == 200
+    assert resp.headers["x-stream-tier"] == "cloud"
+    assert float(resp.headers["x-stream-cost-usd"]) > 0.0   # the paid tier
+    assert resp.body["stream"]["tier"] == "cloud"
+    assert resp.body["usage"]["completion_tokens"] == 4
+
+
+def test_gateway_params_thread_to_hpc_remote_fn(system):
+    """The GenerationParams contract crosses the control plane: a seeded
+    temperature>0 request through the dual-channel HPC tier reproduces."""
+    tok = system.globus.issue_token("gw4@uic.edu")
+    req = {"model": "stream-hpc",
+           "messages": [{"role": "user", "content": "seeded dual channel"}],
+           "max_tokens": 6, "temperature": 0.9, "seed": 21, "stream": False}
+    r1 = system.gateway.handle_chat_completions(req, bearer=tok)
+    r2 = system.gateway.handle_chat_completions(dict(req), bearer=tok)
+    assert r1.status == r2.status == 200
+    assert r1.body["choices"][0]["message"]["content"] == \
+        r2.body["choices"][0]["message"]["content"]
+    # and the params dict crossed the control plane without secrets
+    rec = system.endpoint.task_records()[-1]
+    assert rec.kwargs["gen_params"]["seed"] == 21
