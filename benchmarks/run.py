@@ -63,6 +63,16 @@ def main() -> None:
                      f"{cc['ttft_c1_ratio']:.2f}x",
                      "concurrent/serial TTFT at 1 session"))
 
+    from benchmarks import prefix_cache
+    r_pc = prefix_cache.run(prefix_tokens=512, smoke=small, quiet=True)
+    csv_rows.append(("prefix_cache.warm_over_cold_ttft",
+                     f"{r_pc['multi_turn']['warm_over_cold_best']:.3f}",
+                     "512-token shared prefix (target <= 0.5)"))
+    csv_rows.append(("prefix_cache.shared_prompt_speedup",
+                     f"{r_pc['shared_prompt']['speedup']:.2f}x",
+                     f"{r_pc['shared_prompt']['n_sessions']} sessions, "
+                     f"{r_pc['shared_prompt']['prefix_tokens']}-tok system prompt"))
+
     from benchmarks import gateway
     r_gw = gateway.run(tokens=8 if small else 12, repeats=5 if small else 9,
                        n_routed=9 if small else 30, quiet=True)

@@ -61,7 +61,8 @@ class TokenProducer:
                  enc_key: bytes | None = None):
         self._aes = AESGCM(enc_key) if enc_key else None
         self._prod = relay.connect_producer(channel_id).authenticate(secret)
-        self.seq = 0
+        self.seq = 0           # channel sequence (tokens + meta)
+        self.n_tokens = 0      # tokens only
 
     def _send(self, payload: dict):
         self._prod.send(encrypt_envelope(self._aes, payload)
@@ -71,14 +72,24 @@ class TokenProducer:
         self._send({"t": "token", "seq": self.seq,
                     "id": int(token_id), "text": text})
         self.seq += 1
+        self.n_tokens += 1
+
+    def meta(self, payload: dict):
+        """In-band session metadata (e.g. the admission's prefix-cache
+        hit), sent ahead of the first token. Consumes a sequence number
+        like any other message; the consumer side does not count it as
+        a token or stamp TTFT on it."""
+        self._send({"t": "meta", "seq": self.seq, **payload})
+        self.seq += 1
 
     def done(self) -> int:
-        """Terminate the stream normally; returns tokens relayed."""
+        """Terminate the stream normally; returns tokens relayed
+        (meta messages excluded)."""
         try:
             self._send({"t": "done", "seq": self.seq})
         finally:
             self._prod.close()
-        return self.seq
+        return self.n_tokens
 
     def fail(self, error: str):
         """Best-effort in-band error + close (teardown may already have
@@ -130,7 +141,8 @@ REMOTE_FN_SOURCE = '''
 import base64
 
 def hpc_stream_task(*, messages, model, channel_id, max_tokens=64,
-                    gen_params=None, relay_url=None, vllm_url=None):
+                    gen_params=None, cache_salt="", relay_url=None,
+                    vllm_url=None):
     """Runs ON the HPC worker. Submits to the cluster engine's shared
     continuous batch (ServingEngine.submit — the paper's vLLM-over-
     localhost call) so N concurrent tasks interleave their decode ticks
@@ -158,20 +170,25 @@ def hpc_stream_task(*, messages, model, channel_id, max_tokens=64,
     if relay is None:
         # batch fallback: no streaming; the complete response returns
         # through the control plane (TTFT == total time).
-        handle = engine.submit(prompt, params=params)
+        handle = engine.submit(prompt, params=params, cache_salt=cache_salt)
         res = handle.result(timeout=600.0)
         return {"text": res.text, "n_tokens": res.n_generated,
-                "finish_reason": res.finish_reason, "streamed": False}
+                "finish_reason": res.finish_reason, "streamed": False,
+                "prefix_hit_tokens": res.prefix_hit_tokens}
 
     # stream as generated: the broker's on_token callback IS the relay
-    # producer; a failed push cancels the session (slot reclamation)
+    # producer; a failed push cancels the session (slot reclamation).
+    # The admission's prefix-cache hit rides the channel in-band as a
+    # meta message ahead of the first token.
     prod = Producer(relay, channel_id, secret, enc_key)
-    handle = engine.submit(prompt, params=params, on_token=prod.push)
+    handle = engine.submit(prompt, params=params, on_token=prod.push,
+                           cache_salt=cache_salt, on_meta=prod.meta)
     res = handle.result(timeout=600.0)
     if res.cancelled:
         prod.fail("relay channel torn down")
         raise RuntimeError("stream cancelled: relay channel torn down")
     n = prod.done()
     return {"text": res.text, "n_tokens": n,
-            "finish_reason": res.finish_reason, "streamed": True}
+            "finish_reason": res.finish_reason, "streamed": True,
+            "prefix_hit_tokens": res.prefix_hit_tokens}
 '''

@@ -15,12 +15,16 @@ Model aliases select routing:
     stream-cloud   pin the cloud tier
 
 Every response carries routing metadata: ``x-stream-tier``,
-``x-stream-complexity``, ``x-stream-fallback-depth`` (and, non-stream,
-``x-stream-cost-usd``) headers, plus — when the client sends OpenAI's
+``x-stream-complexity``, ``x-stream-fallback-depth``,
+``x-stream-cache: hit=<n_tokens>`` (prompt tokens the serving tier's
+prefix cache spliced in instead of prefilling — multi-turn follow-ups
+and shared system prompts make this non-zero) and, non-stream,
+``x-stream-cost-usd`` headers, plus — when the client sends OpenAI's
 ``stream_options.include_usage`` — a final usage chunk whose vendor
 ``"stream"`` block holds the authoritative tier/complexity/fallback/cost
 (headers reflect the tier serving the FIRST token; a mid-stream fallback
-can finish on a different tier).
+can finish on a different tier). Each authenticated principal gets its
+own prefix-cache salt, so tenants never share KV pages.
 
 Request path (shared middleware, one implementation for gateway + shim):
 authenticate -> per-caller sliding-window rate limit (429s carry
@@ -268,19 +272,29 @@ class StreamGateway:
         include_usage = bool((request.get("stream_options") or {})
                              .get("include_usage"))
         rid = new_request_id()
+        # per-principal prefix-cache salt: two tenants sending byte-
+        # identical conversations (the usual shared system prompt) get
+        # disjoint radix trees in every serving tier — KV pages never
+        # cross an auth boundary. The chat history itself is serialized
+        # deterministically downstream (core.tiers.canonical_prompt), so
+        # turn N's prompt is a byte prefix of turn N+1's and multi-turn
+        # follow-ups hit the cache.
+        salt = f"{ident.mode}:{ident.subject}"
         self._audit(ident, bearer, client_ip, 200, "accepted",
                     request_id=rid, model=model)
 
         if not stream:
-            return self._complete(rid, model, query, history, tier, params)
+            return self._complete(rid, model, query, history, tier, params,
+                                  salt)
         return self._stream(rid, model, query, history, tier, params,
-                            include_usage)
+                            include_usage, salt)
 
     # ------------------------------------------------------- non-stream
-    def _complete(self, rid, model, query, history, tier, params) -> GatewayResponse:
+    def _complete(self, rid, model, query, history, tier, params,
+                  salt) -> GatewayResponse:
         try:
             h = self.handler.handle(query, history, override_tier=tier,
-                                    params=params)
+                                    params=params, cache_salt=salt)
         except BackendError as e:
             return GatewayResponse(status=502, body=_err("upstream_error", str(e)))
         body = chat_completion(
@@ -295,7 +309,7 @@ class StreamGateway:
 
     # ----------------------------------------------------------- stream
     def _stream(self, rid, model, query, history, tier, params,
-                include_usage) -> GatewayResponse:
+                include_usage, salt) -> GatewayResponse:
         """Run the pipeline on a pool worker; block the caller on the
         token queue for the FIRST event only — one cross-thread handoff
         on the TTFT path — so the response can carry the serving tier in
@@ -308,6 +322,10 @@ class StreamGateway:
         box: dict = {}
         cancel_event = threading.Event()
         attempt = {"tier": None, "depth": 0, "complexity": None}
+        # the serving backend reports its prefix-cache hit just before
+        # the first token, so by the time the first queue event lands
+        # the x-stream-cache header value is already settled
+        cache_meta: dict = {}
 
         def on_attempt(t, depth, decision):
             attempt.update(tier=t, depth=depth,
@@ -318,7 +336,8 @@ class StreamGateway:
                 box["h"] = self.handler.handle(
                     query, history, override_tier=tier, params=params,
                     on_token=lambda tid, text: q.put((tid, text)),
-                    cancel_event=cancel_event, on_attempt=on_attempt)
+                    cancel_event=cancel_event, on_attempt=on_attempt,
+                    cache_salt=salt, on_meta=cache_meta.update)
             except Exception as e:  # surfaced as an SSE error frame
                 box["error"] = str(e)
             finally:
@@ -341,7 +360,9 @@ class StreamGateway:
                    "x-request-id": rid,
                    "x-stream-tier": attempt["tier"] or "",
                    "x-stream-complexity": attempt["complexity"] or "",
-                   "x-stream-fallback-depth": str(attempt["depth"])}
+                   "x-stream-fallback-depth": str(attempt["depth"]),
+                   "x-stream-cache":
+                       f"hit={int(cache_meta.get('prefix_hit_tokens', 0))}"}
         return GatewayResponse(
             status=200, headers=headers,
             stream=self._sse_events(rid, model, q, box, cancel_event,
@@ -384,7 +405,8 @@ class StreamGateway:
         return {"tier": h.tier_used, "complexity": h.complexity.name,
                 "fallback_depth": h.fallback_depth,
                 "resumed_tokens": h.resumed_tokens,
-                "cost_usd": h.result.cost_usd}
+                "cost_usd": h.result.cost_usd,
+                "cache_hit_tokens": h.cache_hit_tokens}
 
     @staticmethod
     def _meta_headers(rid: str, meta: dict) -> dict:
@@ -392,7 +414,8 @@ class StreamGateway:
                 "x-stream-tier": meta["tier"],
                 "x-stream-complexity": meta["complexity"],
                 "x-stream-fallback-depth": str(meta["fallback_depth"]),
-                "x-stream-cost-usd": f"{meta['cost_usd']:.6f}"}
+                "x-stream-cost-usd": f"{meta['cost_usd']:.6f}",
+                "x-stream-cache": f"hit={meta['cache_hit_tokens']}"}
 
     # ------------------------------------------------------------ audit
     def _audit(self, ident, bearer, client_ip, status, note,

@@ -35,6 +35,7 @@ class HandledQuery:
     summarized: bool
     judge_latency_s: float
     resumed_tokens: int = 0   # tokens swallowed after a mid-stream fallback
+    cache_hit_tokens: int = 0  # prompt tokens the tier served from KV cache
 
 
 class _ResumeTap:
@@ -74,7 +75,8 @@ class StreamingHandler:
                params: GenerationParams | None = None, max_tokens: int = 64,
                on_token: Optional[Callable[[int, str], None]] = None,
                cancel_event=None,
-               on_attempt: Optional[Callable] = None) -> HandledQuery:
+               on_attempt: Optional[Callable] = None,
+               cache_salt: str = "", on_meta=None) -> HandledQuery:
         """Run one query through the pipeline. Thread-safe: concurrent
         handle() calls stream through each tier's session broker and
         interleave in its decode batch. ``params`` is the per-request
@@ -83,7 +85,10 @@ class StreamingHandler:
         tears the in-flight stream down mid-generation and frees its
         decode slot. ``on_attempt(tier, depth, decision)`` fires just
         before each backend dispatch — the gateway uses it to expose
-        routing metadata before the first token arrives."""
+        routing metadata before the first token arrives. ``cache_salt``
+        namespaces the serving tiers' prefix caches per tenant, and
+        ``on_meta`` surfaces the admission's prefix-cache hit (fired by
+        the serving backend just before its first token)."""
         params = GenerationParams.of(params, max_tokens=max_tokens)
         history = list(history or [])
         decision = self.router.route(query, override_tier=override_tier)
@@ -108,7 +113,9 @@ class StreamingHandler:
             try:
                 result = backend.stream(messages, params=params,
                                         on_token=tap,
-                                        cancel_event=cancel_event)
+                                        cancel_event=cancel_event,
+                                        cache_salt=cache_salt,
+                                        on_meta=on_meta)
             except BackendError as e:
                 last_err = e
                 continue
@@ -123,7 +130,8 @@ class StreamingHandler:
                                 tier_used=tier, chain=decision.chain,
                                 fallback_depth=depth, summarized=summarized,
                                 judge_latency_s=decision.judge_latency_s,
-                                resumed_tokens=tap.skip if tap else 0)
+                                resumed_tokens=tap.skip if tap else 0,
+                                cache_hit_tokens=result.prefix_hit_tokens)
         raise BackendError(f"all tiers failed; last error: {last_err}")
 
     def route_only(self, query: str, history: list | None = None) -> str:

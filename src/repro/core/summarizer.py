@@ -12,6 +12,23 @@ The paper generates the summary with the free local model; our stand-in
 is deterministic extractive compression (head sentences per message,
 clipped to the budget) — same token accounting, zero-cost property
 preserved, and the probe experiment (Table 3) reproduces exactly.
+
+**Prefix stability.** The summary block is *append-only*: each head
+message compresses to one deterministic line, lines are emitted oldest
+first, and the budget cut freezes at the same message on every turn —
+so turn N's summary text is always a byte prefix of turn N+1's. Since
+the block sits directly after the (stable) system messages, the serving
+tiers' radix-tree prefix caches see summarization as *extending* the
+cached conversation prefix rather than invalidating it: only the
+sliding verbatim tail re-prefills each turn. (The cache salt rides the
+request, not this module — summaries are per-conversation content.)
+
+**Token accounting.** ``count_tokens``/``conversation_tokens`` accept
+the system tokenizer so the ``needed()``/``fits()`` thresholds agree
+with what the engine actually prefills (the conversation is serialized
+as one newline-joined prompt with a single BOS —
+``core.tiers.canonical_prompt``); without a tokenizer they fall back to
+the byte-count heuristic, which overcounts by one per message.
 """
 
 from __future__ import annotations
@@ -39,29 +56,71 @@ DEFAULT_POLICIES = {
 }
 
 
-def count_tokens(text: str) -> int:
-    """Byte-level token count (matches the serving tokenizer)."""
+def count_tokens(text: str, tokenizer=None) -> int:
+    """Token count of one text blob: the system tokenizer when
+    available, else the byte-level heuristic (matches the serving
+    tokenizer's byte mapping plus a BOS)."""
+    if tokenizer is not None:
+        return tokenizer.count(text)
     return len(text.encode("utf-8")) + 1
 
 
-def conversation_tokens(messages) -> int:
+def conversation_tokens(messages, tokenizer=None) -> int:
+    """Tokens the engine will actually prefill for this conversation.
+    With a tokenizer this counts the real serialized prompt (newline-
+    joined contents, ONE BOS — ``core.tiers.canonical_prompt``), so the
+    thresholds track whatever tokenizer the system serves with; the
+    fallback heuristic charges one token per message byte plus one per
+    message (which happens to agree exactly for the byte tokenizer,
+    where each uncounted newline separator offsets one per-message
+    surcharge — but drifts for any subword tokenizer)."""
+    if tokenizer is not None:
+        return tokenizer.count(
+            "\n".join(m.get("content", "") for m in messages))
     return sum(count_tokens(m.get("content", "")) for m in messages)
 
 
-def _extract_summary(messages, budget_tokens: int) -> str:
-    """Deterministic extractive compression: first sentence per message,
-    oldest first, until the budget is filled."""
+def _summary_lines(messages) -> list:
+    """One deterministic line per message: first sentence, clipped.
+    Pure per-message function — the append-only building block of the
+    prefix-stable summary."""
+    lines = []
+    for m in messages:
+        first = m.get("content", "").split(". ")[0][:400]
+        lines.append(f"[{m.get('role', 'user')}] {first}")
+    return lines
+
+
+def _clip_to_tokens(text: str, budget: int, tokenizer=None) -> str:
+    """Longest prefix of ``text`` that counts to <= ``budget`` tokens —
+    binary search on the character cut, measured through the SAME
+    counter as the budget (a raw character slice treated tokens as
+    characters, overshooting the budget for multi-byte or subword
+    tokenizers). Deterministic, so the summary stays prefix-stable."""
+    lo, hi = 0, len(text)
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if count_tokens(text[:mid], tokenizer) <= budget:
+            lo = mid
+        else:
+            hi = mid - 1
+    return text[:lo]
+
+
+def _extract_summary(messages, budget_tokens: int, tokenizer=None) -> str:
+    """Deterministic extractive compression: per-message lines, oldest
+    first, until the budget is filled. Append-only across turns: as the
+    head grows, earlier lines never change, and once the budget cut
+    lands on a message it lands there on every later turn too."""
     parts = []
     used = 0
-    for m in messages:
-        content = m.get("content", "")
-        first = content.split(". ")[0][:400]
-        line = f"[{m.get('role', 'user')}] {first}"
-        t = count_tokens(line)
+    for line in _summary_lines(messages):
+        t = count_tokens(line, tokenizer)
         if used + t > budget_tokens:
-            remaining = max(budget_tokens - used, 0) * 1  # ~1 byte/token
-            if remaining > 16:
-                parts.append(line[:remaining])
+            frag = _clip_to_tokens(line, max(budget_tokens - used, 0),
+                                   tokenizer)
+            if len(frag) > 16:
+                parts.append(frag)
             break
         parts.append(line)
         used += t
@@ -69,18 +128,23 @@ def _extract_summary(messages, budget_tokens: int) -> str:
 
 
 class TierAwareSummarizer:
-    def __init__(self, policies: dict | None = None):
+    def __init__(self, policies: dict | None = None, tokenizer=None):
         self.policies = dict(policies or DEFAULT_POLICIES)
+        self.tokenizer = tokenizer
         self.n_summarizations = 0
 
     def needed(self, messages, tier: str) -> bool:
         pol = self.policies[tier]
         if not pol.enabled:
             return False
-        return conversation_tokens(messages) >= pol.trigger_frac * pol.context_window
+        return (conversation_tokens(messages, self.tokenizer)
+                >= pol.trigger_frac * pol.context_window)
 
     def apply(self, messages, tier: str):
-        """Returns (messages', did_summarize). System messages are kept."""
+        """Returns (messages', did_summarize). System messages are kept.
+        The emitted summary message is deterministic and append-only
+        across turns (see module docstring) so it extends, rather than
+        invalidates, the serving tiers' cached conversation prefix."""
         pol = self.policies[tier]
         if not self.needed(messages, tier):
             return list(messages), False
@@ -88,7 +152,8 @@ class TierAwareSummarizer:
         convo = [m for m in messages if m.get("role") != "system"]
         keep = pol.keep_turn_pairs * 2
         head, tail = (convo[:-keep], convo[-keep:]) if keep else (convo, [])
-        summary_text = _extract_summary(head, pol.summary_budget)
+        summary_text = _extract_summary(head, pol.summary_budget,
+                                        self.tokenizer)
         summary_msg = {"role": "system",
                        "content": f"[conversation summary — compressed for the "
                                   f"{tier} tier]\n{summary_text}"}
@@ -99,5 +164,5 @@ class TierAwareSummarizer:
         """Would this conversation fit the tier's window (with room left
         for the response)?"""
         pol = self.policies[tier]
-        return (conversation_tokens(messages) + pol.response_headroom
-                <= pol.context_window)
+        return (conversation_tokens(messages, self.tokenizer)
+                + pol.response_headroom <= pol.context_window)

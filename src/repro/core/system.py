@@ -57,7 +57,8 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                  hpc_fail: bool = False, cloud_fail: bool = False,
                  rate_limit: int = 1000, scheduler_slots: int = 8,
                  hpc_workers: int = 8, hpc_overrides: dict | None = None,
-                 local_overrides: dict | None = None) -> StreamSystem:
+                 local_overrides: dict | None = None,
+                 prefix_cache_pages: int = 256) -> StreamSystem:
     """Everything wired, smoke-scale models (CPU-friendly).
 
     ``scheduler_slots`` sizes each tier engine's session broker (the
@@ -79,9 +80,11 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
     if local_overrides:
         local_cfg = local_cfg.replace(**local_overrides)
     local_engine = ServingEngine(local_cfg, max_seq=max_seq, rng=rng,
-                                 scheduler_slots=scheduler_slots)
+                                 scheduler_slots=scheduler_slots,
+                                 prefix_cache_pages=prefix_cache_pages)
     hpc_engine = ServingEngine(hpc_cfg, max_seq=max_seq, rng=rng,
-                               scheduler_slots=scheduler_slots)
+                               scheduler_slots=scheduler_slots,
+                               prefix_cache_pages=prefix_cache_pages)
     local_engine.warmup()
     hpc_engine.warmup()
 
@@ -120,7 +123,10 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
     # --- routing / summarization / handler ---
     judge = judge or CachedJudge(KeywordJudge())
     router = TierRouter(backends, judge)
-    summarizer = TierAwareSummarizer(summarizer_policies or DEFAULT_POLICIES)
+    # token accounting against the REAL tokenizer, so needed()/fits()
+    # thresholds agree with what the engines actually prefill
+    summarizer = TierAwareSummarizer(summarizer_policies or DEFAULT_POLICIES,
+                                     tokenizer=local_engine.tokenizer)
     tracker = UsageTracker()
     handler = StreamingHandler(router, summarizer, tracker)
 

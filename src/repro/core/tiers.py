@@ -65,6 +65,7 @@ class TierResult:
     streamed: bool
     finish_reason: str = "stop"    # "stop" | "length" | "cancelled"
     error: Optional[str] = None
+    prefix_hit_tokens: int = 0     # prompt tokens served from the KV cache
 
 
 class BackendError(Exception):
@@ -78,15 +79,20 @@ class TierBackend(Protocol):
     ``params`` (sampling + stop + max_tokens), fire ``on_token`` per
     generated token on whatever thread produces it, and tear the
     session down (freeing its decode slot) when ``cancel_event`` is
-    set. ``health_check`` must be cheap (~100 ms auth ping at most) —
-    it runs at routing time for every query."""
+    set. ``cache_salt`` namespaces the serving engine's prefix cache
+    per tenant (the gateway derives it from the authenticated
+    principal); ``on_meta`` fires once before the first token with
+    ``{"prefix_hit_tokens": n}``. ``health_check`` must be cheap
+    (~100 ms auth ping at most) — it runs at routing time for every
+    query."""
 
     spec: TierSpec
 
     def stream(self, messages, *, params: GenerationParams | None = None,
                max_tokens: int | None = None,
                on_token: Optional[Callable[[int, str], None]] = None,
-               cancel_event=None) -> TierResult: ...
+               cancel_event=None, cache_salt: str = "",
+               on_meta=None) -> TierResult: ...
 
     def health_check(self) -> bool: ...
 
@@ -97,8 +103,17 @@ def _resolve_params(params, max_tokens) -> GenerationParams:
     return GenerationParams.of(params, max_tokens=max_tokens)
 
 
-def _join_messages(messages) -> str:
+def canonical_prompt(messages) -> str:
+    """THE deterministic chat-messages -> engine-prompt serialization,
+    shared by every tier backend. Stability matters beyond aesthetics:
+    turn N's serialized conversation must be a byte prefix of turn
+    N+1's, so the engines' radix-tree prefix caches see multi-turn
+    follow-ups (and shared system prompts) as cache hits rather than
+    fresh prefills."""
     return "\n".join(m.get("content", "") for m in messages)
+
+
+_join_messages = canonical_prompt      # legacy alias
 
 
 class LocalBackend:
@@ -116,10 +131,11 @@ class LocalBackend:
         return True
 
     def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
-               cancel_event=None) -> TierResult:
+               cancel_event=None, cache_salt: str = "",
+               on_meta=None) -> TierResult:
         gp = _resolve_params(params, max_tokens)
         t0 = time.perf_counter()
-        prompt = _join_messages(messages)
+        prompt = canonical_prompt(messages)
         box = {}
         handle_box = {}
 
@@ -134,7 +150,8 @@ class LocalBackend:
             if on_token:
                 on_token(tid, text)
 
-        handle = self.engine.submit(prompt, params=gp, on_token=cb)
+        handle = self.engine.submit(prompt, params=gp, on_token=cb,
+                                    cache_salt=cache_salt, on_meta=on_meta)
         handle_box["h"] = handle
         try:
             res = handle.result(timeout=self.timeout_s)
@@ -155,7 +172,8 @@ class LocalBackend:
             ttft_s=box.get("ttft", total), total_s=total,
             tok_per_s=res.n_generated / max(total - box.get("ttft", 0.0), 1e-9),
             cost_usd=0.0, streamed=True, finish_reason=res.finish_reason,
-            error="cancelled" if res.cancelled else None)
+            error="cancelled" if res.cancelled else None,
+            prefix_hit_tokens=res.prefix_hit_tokens)
 
 
 class HPCBackend:
@@ -177,27 +195,32 @@ class HPCBackend:
         return self.endpoint.health_check()
 
     def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
-               cancel_event=None) -> TierResult:
+               cancel_event=None, cache_salt: str = "",
+               on_meta=None) -> TierResult:
         gp = _resolve_params(params, max_tokens)
         if self.relay_enabled and self.relay is not None:
-            return self._stream_relay(messages, gp, on_token, cancel_event)
-        return self._batch_fallback(messages, gp, on_token)
+            return self._stream_relay(messages, gp, on_token, cancel_event,
+                                      cache_salt, on_meta)
+        return self._batch_fallback(messages, gp, on_token, cache_salt, on_meta)
 
     # ---- dual-channel path ----
     def _stream_relay(self, messages, gp: GenerationParams, on_token,
-                      cancel_event=None) -> TierResult:
+                      cancel_event=None, cache_salt: str = "",
+                      on_meta=None) -> TierResult:
         t0 = time.perf_counter()
         # (1) fresh UUID channel per query
         channel_id = new_channel_id()
         # (2) submit the control-plane task with the channel id as an arg
         #     (no credentials in args — pre-provisioned worker env; the
-        #     generation params ride as a plain JSON-able dict).
+        #     generation params ride as a plain JSON-able dict, the
+        #     tenant's cache salt alongside them).
         fut = self.endpoint.submit(
             REMOTE_FN_SOURCE, REMOTE_FN_NAME,
             messages=[{"role": m.get("role", "user"), "content": m.get("content", "")}
                       for m in messages],
             model=self.spec.model_name, channel_id=channel_id,
             max_tokens=gp.max_tokens, gen_params=gp.to_dict(),
+            cache_salt=cache_salt,
             relay_url="wss://relay.example/ws",
             vllm_url="http://127.0.0.1:8000/v1")
         # (3) immediately open the consumer — it is usually waiting before
@@ -205,10 +228,18 @@ class HPCBackend:
         pieces = []
         ttft = None
         n = 0
+        hit = 0
         cancelled = False
         try:
             for payload in consume_tokens(self.relay, channel_id, self._secret,
                                           self._enc_key, timeout_s=self.task_timeout_s):
+                if payload.get("t") == "meta":
+                    # in-band cache metadata rides the channel ahead of
+                    # the first token — not a token, no TTFT stamp
+                    hit = int(payload.get("prefix_hit_tokens", 0))
+                    if on_meta:
+                        on_meta({"prefix_hit_tokens": hit})
+                    continue
                 if ttft is None:
                     ttft = time.perf_counter() - t0
                 n += 1
@@ -231,27 +262,34 @@ class HPCBackend:
         text = "".join(pieces) if cancelled else result.get("text", "".join(pieces))
         finish = ("cancelled" if cancelled
                   else result.get("finish_reason", "stop") or "stop")
+        if not cancelled:
+            hit = int(result.get("prefix_hit_tokens", hit) or hit)
         return TierResult(
             tier=self.spec.name, model=self.spec.model_name, text=text,
             n_prompt_tokens=sum(len(m.get("content", "")) for m in messages),
             n_completion_tokens=n, ttft_s=ttft, total_s=total,
             tok_per_s=n / max(total - ttft, 1e-9), cost_usd=0.0, streamed=True,
-            finish_reason=finish, error="cancelled" if cancelled else None)
+            finish_reason=finish, error="cancelled" if cancelled else None,
+            prefix_hit_tokens=hit)
 
     # ---- batch fallback (relay unavailable; paper §7.2 row 3) ----
-    def _batch_fallback(self, messages, gp: GenerationParams, on_token) -> TierResult:
+    def _batch_fallback(self, messages, gp: GenerationParams, on_token,
+                        cache_salt: str = "", on_meta=None) -> TierResult:
         t0 = time.perf_counter()
         fut = self.endpoint.submit(
             REMOTE_FN_SOURCE, REMOTE_FN_NAME,
             messages=list(messages), model=self.spec.model_name,
             channel_id=new_channel_id(), max_tokens=gp.max_tokens,
-            gen_params=gp.to_dict())
+            gen_params=gp.to_dict(), cache_salt=cache_salt)
         try:
             result = fut.result(timeout=self.task_timeout_s)
         except TaskFailed as e:
             raise BackendError(f"hpc batch task failed: {e}") from e
         total = time.perf_counter() - t0
         text = result.get("text", "")
+        hit = int(result.get("prefix_hit_tokens", 0) or 0)
+        if on_meta:
+            on_meta({"prefix_hit_tokens": hit})
         if on_token:  # entire payload arrives at once
             on_token(-1, text)
         n = result.get("n_tokens", 0)
@@ -260,7 +298,8 @@ class HPCBackend:
             n_prompt_tokens=sum(len(m.get("content", "")) for m in messages),
             n_completion_tokens=n, ttft_s=total, total_s=total,  # TTFT == total
             tok_per_s=n / max(total, 1e-9), cost_usd=0.0, streamed=False,
-            finish_reason=result.get("finish_reason", "stop") or "stop")
+            finish_reason=result.get("finish_reason", "stop") or "stop",
+            prefix_hit_tokens=hit)
 
 
 class CloudBackend:
@@ -281,12 +320,13 @@ class CloudBackend:
         return not self.fail
 
     def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
-               cancel_event=None) -> TierResult:
+               cancel_event=None, cache_salt: str = "",
+               on_meta=None) -> TierResult:
         gp = _resolve_params(params, max_tokens)
         if self.fail:
             raise BackendError("cloud API unreachable")
         t0 = time.perf_counter()
-        prompt = _join_messages(messages)
+        prompt = canonical_prompt(messages)
         handle = None
         done_box = {}
         if self.engine is not None:
@@ -305,7 +345,7 @@ class CloudBackend:
             handle = self.engine.submit(
                 prompt, params=gp,
                 on_token=lambda tid, text: q.put((tid, text)),
-                on_done=_done)
+                on_done=_done, cache_salt=cache_salt, on_meta=on_meta)
 
             def _iter(h=handle):
                 while True:
@@ -354,4 +394,5 @@ class CloudBackend:
             n_prompt_tokens=n_prompt, n_completion_tokens=n_comp,
             ttft_s=ttft, total_s=total, tok_per_s=n_comp / max(total - ttft, 1e-9),
             cost_usd=cost, streamed=True, finish_reason=finish,
-            error="cancelled" if cancelled else None)
+            error="cancelled" if cancelled else None,
+            prefix_hit_tokens=handle.prefix_hit_tokens if handle is not None else 0)

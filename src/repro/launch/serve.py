@@ -19,10 +19,14 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--arch", default="minitron-8b", help="HPC-tier architecture")
+    ap.add_argument("--prefix-pages", type=int, default=256,
+                    help="KV page-pool budget per tier engine (0 disables "
+                         "prefix caching)")
     args = ap.parse_args()
 
     print("building STREAM system (three tiers + relay + proxy)...")
-    sys_ = build_system(hpc_arch=args.arch, dispatch_latency_s=0.05, max_seq=256)
+    sys_ = build_system(hpc_arch=args.arch, dispatch_latency_s=0.05, max_seq=256,
+                        prefix_cache_pages=args.prefix_pages)
 
     queries = [
         "What is the capital of France?",

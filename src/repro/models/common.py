@@ -244,3 +244,47 @@ def cache_axes(specs):
     batch = jax.tree.map(axis("batch"), specs, is_leaf=_is_spec)
     seq = jax.tree.map(axis("kv_seq"), specs, is_leaf=_is_spec)
     return batch, seq
+
+
+@dataclass(frozen=True)
+class LeafLayout:
+    """Page-granular layout of one cache leaf, as the KV page pool sees
+    it (``repro.serving.pagepool``):
+
+      * ``paged``  — the leaf has a "kv_seq" axis: a page is a fixed-size
+        slice of that axis and is a pure function of the token ids it
+        covers (position-stable prefill), so pages are shareable across
+        sessions/turns at page granularity.
+      * ``state``  — the leaf has a batch axis but no "kv_seq" axis
+        (SSM h0 / conv windows, xLSTM cells, cross-attention K/V): the
+        pool stores a per-page *snapshot* of the whole leaf, valid only
+        at the exact token position it was taken (a prefix match must
+        end on a snapshot-bearing page to resume from it).
+      * neither    — no batch axis (the "pos" scalar): not pooled.
+    """
+    batch_axis: int        # -1 when absent
+    seq_axis: int          # -1 when absent
+
+
+def cache_layout(specs):
+    """cache_specs() tree -> same-structure tree of :class:`LeafLayout`.
+    ``has_state_leaves(layout)`` tells the serving layer whether prefix
+    resume needs state snapshots at all (pure-attention models don't)."""
+
+    def one(spec):
+        if not _is_spec(spec):
+            return LeafLayout(-1, -1)
+        return LeafLayout(
+            spec.index("batch") if "batch" in spec else -1,
+            spec.index("kv_seq") if "kv_seq" in spec else -1)
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def has_state_leaves(layout) -> bool:
+    """True when the model carries per-slot state outside the paged KV
+    axis (recurrent states, cross K/V) — prefix matches must then end on
+    a page that carries a state snapshot."""
+    return any(l.batch_axis >= 0 and l.seq_axis < 0
+               for l in jax.tree.leaves(
+                   layout, is_leaf=lambda x: isinstance(x, LeafLayout)))

@@ -3,8 +3,12 @@ from repro.serving.sampler import GenerationParams, SamplerConfig
 from repro.serving.tokenizer import ByteTokenizer
 from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.serving.broker import SessionBroker, SessionHandle, SessionResult
+from repro.serving.pagepool import PagePool, SlotSplicer, chunk_plan
+from repro.serving.prefix_cache import CacheStats, PrefixCache, PrefixLease
 
 __all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
            "GenerationParams", "SamplerConfig",
            "ContinuousBatcher", "Request",
-           "SessionBroker", "SessionHandle", "SessionResult"]
+           "SessionBroker", "SessionHandle", "SessionResult",
+           "PagePool", "SlotSplicer", "chunk_plan",
+           "CacheStats", "PrefixCache", "PrefixLease"]

@@ -46,6 +46,7 @@ class SessionResult:
     cancelled: bool = False
     finish_reason: str = "stop"      # "stop" | "length" | "cancelled"
     error: Optional[str] = None
+    prefix_hit_tokens: int = 0       # prompt tokens served from the KV cache
 
 
 class SessionHandle:
@@ -55,6 +56,7 @@ class SessionHandle:
         self.rid = rid
         self.submitted_at = time.perf_counter()
         self.ttft_s: Optional[float] = None
+        self.prefix_hit_tokens = 0   # set with the first token
         self._cancel_fn = cancel_fn
         self._event = threading.Event()
         self._result: Optional[SessionResult] = None
@@ -76,11 +78,13 @@ class SessionHandle:
 
 class SessionBroker:
     def __init__(self, engine, *, slots: int = 8, max_seq: int | None = None,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32, page: int | None = None,
+                 prefix_pages: int | None = None):
         self.engine = engine
-        self.batcher = ContinuousBatcher(engine, slots=slots,
-                                         max_seq=max_seq,
-                                         prefill_chunk=prefill_chunk)
+        self.batcher = ContinuousBatcher(
+            engine, slots=slots, max_seq=max_seq, prefill_chunk=prefill_chunk,
+            page=page if page is not None else getattr(engine, "page", 16),
+            prefix_pages=prefix_pages)
         self.slots = slots
         # The batcher is touched ONLY by the scheduler thread. Callers
         # talk to it through mailboxes drained once per tick, so a
@@ -98,11 +102,17 @@ class SessionBroker:
                on_token: Optional[Callable[[int, str], None]] = None,
                on_done: Optional[Callable[[SessionResult], None]] = None,
                deadline_s: float = 0.0, rid: str | None = None,
-               params: GenerationParams | dict | None = None) -> SessionHandle:
+               params: GenerationParams | dict | None = None,
+               cache_salt: str = "", on_meta=None) -> SessionHandle:
         """Enqueue one streaming session; thread-safe, returns immediately.
         ``params`` (a :class:`GenerationParams`, or its dict wire form)
         carries the per-request sampling contract; when given, its
-        ``max_tokens`` wins over the legacy ``max_new_tokens`` kwarg."""
+        ``max_tokens`` wins over the legacy ``max_new_tokens`` kwarg.
+        ``cache_salt`` namespaces the session's prefix-cache tree (the
+        gateway derives it from the authenticated principal, so tenants
+        never share prefixes). ``on_meta`` fires once, just before the
+        first token, with ``{"prefix_hit_tokens": n}`` — the number of
+        prompt tokens the admission served from the shared KV pool."""
         gp = GenerationParams.of(params, max_tokens=max_new_tokens)
         max_new_tokens = gp.max_tokens
         tk = self.engine.tokenizer
@@ -116,6 +126,12 @@ class SessionBroker:
         def tok_cb(tid: int, text: str):
             if handle.ttft_s is None:
                 handle.ttft_s = time.perf_counter() - handle.submitted_at
+                handle.prefix_hit_tokens = req.prefix_hit_tokens
+                if on_meta is not None:
+                    try:
+                        on_meta({"prefix_hit_tokens": req.prefix_hit_tokens})
+                    except Exception:
+                        pass
             if on_token is not None and not state["dead_cb"]:
                 try:
                     on_token(tid, text)
@@ -136,7 +152,8 @@ class SessionBroker:
                 n_prompt=len(ids), n_generated=n, cancelled=r.cancelled,
                 finish_reason=r.finish_reason
                 or ("cancelled" if r.cancelled else "stop"),
-                error="callback error" if state["dead_cb"] else r.error)
+                error="callback error" if state["dead_cb"] else r.error,
+                prefix_hit_tokens=r.prefix_hit_tokens)
             handle._result = res
             handle._event.set()
             if on_done is not None and not state["dead_cb"]:
@@ -147,7 +164,7 @@ class SessionBroker:
 
         req = Request(rid=rid, prompt_ids=ids, max_new_tokens=max_new_tokens,
                       on_token=tok_cb, on_done=done_cb, deadline_s=deadline_s,
-                      params=gp)
+                      params=gp, cache_salt=cache_salt)
         handle._cancel_fn = lambda: self._cancel(req)
         with self._lock:
             if self._shutdown:

@@ -5,6 +5,20 @@ through an ``on_token`` callback *as they are produced* — the producer
 side of the paper's data plane plugs in here. ``generate_batch`` runs a
 fixed batch. Streaming vs batch-fallback TTFT in the Table-2 benchmark
 both run through this engine; only the delivery path differs.
+
+Prefill is **position-stable** everywhere: prompts run at absolute
+positions 0..n-1 in page-aligned chunks (``pagepool.chunk_plan``), never
+left-padded to power-of-two buckets. Identical token prefixes therefore
+produce bitwise-identical KV in every path — single-shot ``generate``,
+``generate_batch`` rows, and the continuous batcher — which is both the
+numerical-parity contract between those paths and the property the
+shared paged-KV prefix cache (``serving/prefix_cache.py``) relies on.
+
+Sampling is consolidated onto ``sampler.sample_slots`` for every decode
+path: single-shot, fixed-batch, and the fused batcher tick all draw
+through the same per-slot temperature/top-p/seeded-stream
+implementation (slot 0 of a ``generate`` call and slot i of a batch use
+the same (rng, slot)-keyed draw, so they agree token-for-token).
 """
 
 from __future__ import annotations
@@ -20,9 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
-from repro.models.common import ModelConfig
+from repro.models.common import ModelConfig, cache_layout, round_up
+from repro.serving.pagepool import SlotSplicer, chunk_plan
 from repro.serving.sampler import (GenerationParams, SamplerConfig,
-                                   StopMatcher, sample, sample_slots)
+                                   StopMatcher, sample_slots)
 from repro.serving.scheduler import clip_prompt
 from repro.serving.tokenizer import ByteTokenizer
 
@@ -42,7 +57,8 @@ class GenerationResult:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, params=None, rng=None,
                  max_seq: int = 256, sampler: SamplerConfig | None = None,
-                 scheduler_slots: int = 4, prefill_chunk: int = 32):
+                 scheduler_slots: int = 4, prefill_chunk: int = 32,
+                 page: int = 16, prefix_cache_pages: int = 256):
         self.cfg = cfg
         self.model = build_model(cfg)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -51,9 +67,17 @@ class ServingEngine:
         self.max_seq = max_seq
         self.tokenizer = ByteTokenizer(cfg.vocab_size)
         self.sampler = sampler or SamplerConfig(vocab_size=cfg.vocab_size)
+        # KV page size + the shared pool budget for the broker's prefix
+        # cache (0 disables prefix caching; per-slot buffers still work)
+        self.page = page
+        self.prefix_cache_pages = prefix_cache_pages
 
-        self._prefill = jax.jit(self.model.prefill)
+        self._prefill_chunk = jax.jit(self.model.prefill_chunk)
         self._decode = jax.jit(self.model.decode_step)
+        self._sample = jax.jit(
+            lambda logits, k, t, p, s, st:
+            sample_slots(logits, k, self.sampler, t, p, s, st))
+        self._splicer: SlotSplicer | None = None
         self._warm = False
 
         # concurrent-session broker (lazily started on first submit());
@@ -72,12 +96,20 @@ class ServingEngine:
         """The engine's SessionBroker, or None if never started."""
         return self._broker
 
+    @property
+    def prefix_cache(self):
+        """The broker's radix-tree prefix cache (None until the broker
+        starts, or when ``prefix_cache_pages=0``)."""
+        return self._broker.batcher.prefix if self._broker is not None else None
+
     def _get_broker(self):
         with self._broker_lock:
             if self._broker is None:
                 from repro.serving.broker import SessionBroker
-                self._broker = SessionBroker(self, slots=self.scheduler_slots,
-                                             prefill_chunk=self.prefill_chunk)
+                self._broker = SessionBroker(
+                    self, slots=self.scheduler_slots,
+                    prefill_chunk=self.prefill_chunk, page=self.page,
+                    prefix_pages=self.prefix_cache_pages)
             return self._broker
 
     def shutdown(self):
@@ -90,17 +122,21 @@ class ServingEngine:
     def submit(self, prompt, *, max_new_tokens: int = 32,
                on_token: Optional[Callable[[int, str], None]] = None,
                on_done=None, deadline_s: float = 0.0, rid: str | None = None,
-               params: GenerationParams | dict | None = None):
+               params: GenerationParams | dict | None = None,
+               cache_salt: str = "", on_meta=None):
         """Thread-safe streaming submission: enqueue one session and
         return a :class:`repro.serving.broker.SessionHandle` immediately.
         Concurrent sessions interleave in the broker's shared decode
         batch; every tier backend streams through here instead of
         serial ``generate`` calls. ``params`` is the per-request
-        :class:`GenerationParams` contract (dict wire form accepted)."""
+        :class:`GenerationParams` contract (dict wire form accepted).
+        ``cache_salt`` namespaces the prefix cache per tenant; ``on_meta``
+        reports the admission's prefix-cache hit with the first token."""
         if self.use_scheduler:
             return self._get_broker().submit(
                 prompt, max_new_tokens=max_new_tokens, on_token=on_token,
-                on_done=on_done, deadline_s=deadline_s, rid=rid, params=params)
+                on_done=on_done, deadline_s=deadline_s, rid=rid, params=params,
+                cache_salt=cache_salt, on_meta=on_meta)
         # legacy serial path: one blocking generate at a time, callers
         # queue on the engine lock (TTFT includes the queue wait)
         from repro.serving.broker import SessionHandle, SessionResult
@@ -130,27 +166,58 @@ class ServingEngine:
         return handle
 
     def _bucket(self, n: int) -> int:
-        """Prompts are left-padded to power-of-two buckets so prefill
-        compiles once per bucket, not once per prompt length."""
+        """Power-of-two bucket for n — the *capacity-budget* unit
+        (``clip_prompt``), no longer a padding unit: prefill runs the
+        raw prompt at absolute positions."""
         b = 16
         while b < n:
             b *= 2
         return min(b, self.max_seq - 1)
 
+    def _chunked_prefill(self, ids: list, cache: dict):
+        """Position-stable prefill of ``ids`` from position 0: one jitted
+        ``prefill_chunk`` dispatch per page-aligned piece. Returns the
+        last piece's logits and the filled cache."""
+        off, logits = 0, None
+        for n in chunk_plan(0, len(ids), self.page):
+            chunk = jnp.asarray([ids[off:off + n]], jnp.int32)
+            logits, cache = self._prefill_chunk(self.params, chunk, cache)
+            off += n
+        return logits, cache
+
+    def _param_vectors(self, gp: GenerationParams | None, B: int = 1):
+        """Per-slot sampling vectors for ``sample_slots``, resolved
+        against the engine default (the exact resolution the continuous
+        batcher applies at admission)."""
+        sc = self.sampler
+        temp = (gp.temperature if gp is not None and gp.temperature is not None
+                else sc.temperature)
+        topp = gp.top_p if gp is not None and gp.top_p is not None else sc.top_p
+        seed = ((gp.seed & 0x7FFFFFFF)
+                if gp is not None and gp.seed is not None else -1)
+        return (jnp.full((B,), temp, jnp.float32),
+                jnp.full((B,), topp, jnp.float32),
+                jnp.full((B,), seed, jnp.int32))
+
     def warmup(self, batch: int = 1, buckets=(16, 32, 64)):
-        """Compile prefill (per bucket) + decode so benchmarks measure
-        steady state, not XLA compilation. Buckets at or beyond max_seq
-        are clamped to max_seq-1 so at least one shape always compiles
-        (a tiny max_seq used to leave `last`/`cache` unbound)."""
-        usable = sorted({min(b, max(self.max_seq - 1, 1)) for b in buckets})
+        """Compile the page-aligned prefill-chunk shapes ((1, page) and
+        every power of two below it), decode, and the slot sampler, so
+        benchmarks measure steady state rather than XLA compilation.
+        ``buckets`` is accepted for backwards compatibility; chunk shapes
+        are what position-stable prefill actually dispatches."""
+        sizes = sorted({min(s, self.max_seq)
+                        for s in ([self.page]
+                                  + [1 << k for k in range(20) if (1 << k) < self.page])})
         last = cache = None
-        for b in usable:
-            toks = jnp.zeros((batch, b), jnp.int32)
+        for s in sizes:
+            toks = jnp.zeros((batch, s), jnp.int32)
             cache = self.model.init_cache(batch, self.max_seq)
-            last, cache = self._prefill(self.params, toks, cache)
+            last, cache = self._prefill_chunk(self.params, toks, cache)
         tok = jnp.argmax(last, -1)[:, None]
         self._decode(self.params, tok, cache)
-        _ = sample(last, jax.random.PRNGKey(0), self.sampler)
+        t, p, s = self._param_vectors(None, batch)
+        _ = self._sample(last, jax.random.PRNGKey(0), t, p, s,
+                         jnp.zeros((batch,), jnp.int32))
         self._warm = True
 
     # ------------------------------------------------------------------
@@ -161,8 +228,9 @@ class ServingEngine:
         """Single-request generation with per-token streaming callback.
         ``params`` overrides the engine's default sampler per call
         (temperature/top_p/seed) and adds stop-string matching — the
-        same contract, and for seeded requests the same sample stream,
-        as the continuous batcher."""
+        same contract, the same ``sample_slots`` implementation, and for
+        seeded requests the same sample stream, as the continuous
+        batcher."""
         t0 = time.perf_counter()
         gp = GenerationParams.of(params) if params is not None else None
         if gp is not None:
@@ -172,37 +240,16 @@ class ServingEngine:
         else:
             ids = list(prompt)
         ids, max_new_tokens = clip_prompt(ids, max_new_tokens, self.max_seq)
-        bucket = self._bucket(len(ids))
-        ids_p = [self.tokenizer.pad_id] * (bucket - len(ids)) + ids  # left-pad
-        toks = jnp.asarray([ids_p], jnp.int32)
 
-        # per-slot sampling only when the request overrides the engine
-        # sampler — params that merely set max_tokens/stop keep the
-        # engine-default draw (this un-jitted path pays per-op dispatch,
-        # so it must stay as cheap as the pre-params baseline)
-        override = gp is not None and (gp.temperature is not None
-                                       or gp.top_p is not None
-                                       or gp.seed is not None)
-        if override:
-            sc = self.sampler
-            temps = jnp.full((1,), gp.temperature if gp.temperature is not None
-                             else sc.temperature, jnp.float32)
-            topps = jnp.full((1,), gp.top_p if gp.top_p is not None
-                             else sc.top_p, jnp.float32)
-            # same int32 mask as the batcher, so serial and batched
-            # draws of one seeded request stay identical
-            seeds = jnp.full((1,), (gp.seed & 0x7FFFFFFF)
-                             if gp.seed is not None else -1, jnp.int32)
+        temps, topps, seeds = self._param_vectors(gp)
 
         def draw(logits, step):
             self.rng, k = jax.random.split(self.rng)
-            if not override:
-                return sample(logits, k, self.sampler)
-            return sample_slots(logits, k, self.sampler, temps, topps, seeds,
+            return self._sample(logits, k, temps, topps, seeds,
                                 jnp.full((1,), step, jnp.int32))
 
         cache = self.model.init_cache(1, self.max_seq)
-        logits, cache = self._prefill(self.params, toks, cache)
+        logits, cache = self._chunked_prefill(ids, cache)
         tok = draw(logits, 0)[:, None]
 
         first = int(tok[0, 0])
@@ -257,29 +304,43 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def generate_batch(self, prompts: list[str], *, max_new_tokens: int = 32):
-        """Fixed-batch generation (benchmark path; right-padded prompts)."""
+        """Fixed-batch generation (benchmark path). Each row prefills
+        position-stable at batch=1 and is spliced into a shared B-slot
+        cache (the same paged splice the continuous batcher uses), then
+        all rows decode together through ``sample_slots`` — one
+        implementation for single-shot and batched decode, so row i of a
+        batch reproduces slot 0 of a solo ``generate`` draw-for-draw."""
         B = len(prompts)
         enc = [self.tokenizer.encode(p) for p in prompts]
         L = self._bucket(max(len(e) for e in enc))
-        # decode writes L..L+max_new-2: keep them inside the seq axis
+        # decode writes len..len+max_new-2: keep them inside the seq axis
         max_new_tokens = max(min(max_new_tokens, self.max_seq + 1 - L), 1)
-        toks = np.full((B, L), self.tokenizer.pad_id, np.int32)
-        for i, e in enumerate(enc):
-            toks[i, L - len(e):] = e  # left-pad so last position is real
+        if self._splicer is None:
+            self._splicer = SlotSplicer(cache_layout(self.model.cache_specs()))
         cache = self.model.init_cache(B, self.max_seq)
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        cache["pos"] = jnp.zeros((B,), jnp.int32)
+        first_logits = []
+        for i, ids in enumerate(enc):
+            one = self.model.init_cache(1, self.max_seq)
+            lg, one = self._chunked_prefill(ids, one)
+            first_logits.append(lg)
+            used = min(round_up(len(ids), self.page), self.max_seq)
+            cache = self._splicer(cache, one, i, used)
+        logits = jnp.concatenate(first_logits, axis=0)
+        temps, topps, seeds = self._param_vectors(None, B)
         outs = [[] for _ in range(B)]
-        # sample the first token exactly like the decode loop (and like
-        # generate()) — hard-coded argmax made batch and single-request
-        # outputs diverge at temperature > 0
-        self.rng, k = jax.random.split(self.rng)
-        tok = sample(logits, k, self.sampler)[:, None]
+
+        def draw(logits, step):
+            self.rng, k = jax.random.split(self.rng)
+            return self._sample(logits, k, temps, topps, seeds,
+                                jnp.full((B,), step, jnp.int32))
+
+        tok = draw(logits, 0)[:, None]
         for i in range(B):
             outs[i].append(int(tok[i, 0]))
-        for _ in range(max_new_tokens - 1):
+        for t in range(max_new_tokens - 1):
             logits, cache = self._decode(self.params, tok, cache)
-            self.rng, k = jax.random.split(self.rng)
-            tok = sample(logits, k, self.sampler)[:, None]
+            tok = draw(logits, t + 1)[:, None]
             for i in range(B):
                 outs[i].append(int(tok[i, 0]))
         return [self.tokenizer.decode(o) for o in outs], outs

@@ -1,0 +1,308 @@
+"""PagePool — shared device-resident KV page memory.
+
+KV ownership used to live entirely inside the continuous batcher's
+per-slot contiguous buffers: every admission prefilled its whole prompt
+from token zero and every finished session's KV was discarded. The page
+pool is the new owner of *reusable* KV memory: a fixed budget of
+fixed-size pages, resident on device, that the radix-tree prefix cache
+(:mod:`repro.serving.prefix_cache`) maps to token-id page keys so that
+sessions, turns, and tenants (under distinct cache salts) share prefix
+KV instead of recomputing it.
+
+Layout is derived from the model's ``cache_specs()`` contract
+(:func:`repro.models.common.cache_layout`): for every cache leaf with a
+``"kv_seq"`` axis the pool holds ``(capacity, ...page-block...)`` — the
+batch axis replaced by the pool-page axis and the sequence axis clipped
+to one page — and for every *state* leaf (batch axis but no ``"kv_seq"``:
+SSM h0 / conv windows, xLSTM cells, cross-attention K/V) it holds a
+per-page snapshot of the whole leaf, valid only at the exact token
+position it was taken. Leaves without a batch axis (the ``"pos"``
+scalar) are not pooled.
+
+Everything here is **position-stable**: pages are pure functions of the
+token ids they cover because the serving layer prefills prompts at
+absolute positions 0..n-1 in page-aligned chunks (no left-padding, no
+power-of-two buckets) — see :func:`chunk_plan`. A page copied out of the
+pool is therefore bitwise the KV a cold prefill would have computed.
+
+The pool is a dumb allocator: ``alloc``/``free`` manage the free list,
+``store_page``/``store_state``/``load`` move page-sized blocks between a
+session cache (any batch size) and the pool. Refcounts, pinning, LRU and
+the token-key radix tree live in the prefix cache, which is the pool's
+only client.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import LeafLayout, cache_layout, has_state_leaves
+
+
+def chunk_plan(n_cached: int, n_total: int, page: int) -> list[int]:
+    """Deterministic page-aligned prefill decomposition of the token
+    range ``[n_cached, n_total)``.
+
+    Chunk boundaries are a pure function of *absolute* position: one
+    chunk per page up to the last full page, then the sub-page tail in
+    descending powers of two. Cold prefill (``n_cached=0``) and a
+    prefix-hit resume (``n_cached`` = some page multiple) therefore run
+    the model over *identical* chunk extents for every position they
+    both compute — which is what makes warm decode token-identical to
+    cold decode, not merely close. Bounded compile variants: ``(1,
+    page)`` plus ``(1, 2^k)`` for ``2^k < page``.
+    """
+    assert n_cached % page == 0, (n_cached, page)
+    pieces = []
+    pos = n_cached
+    last_page = (n_total // page) * page
+    while pos < last_page:
+        pieces.append(page)
+        pos += page
+    rem = n_total - max(pos, n_cached)
+    while rem > 0:
+        p = 1 << (rem.bit_length() - 1)      # largest power of two <= rem
+        pieces.append(p)
+        rem -= p
+    return pieces
+
+
+class SlotSplicer:
+    """Jitted batch=1 -> slot cache splice, shared by the continuous
+    batcher's admission path and ``ServingEngine.generate_batch``.
+    Specialized per used-length: leaves with a ``"kv_seq"`` axis copy
+    only the first ``used`` positions; batch-only leaves copy the whole
+    slot slice; leaves without a batch axis are untouched (``"pos"`` is
+    spliced explicitly from the source's scalar)."""
+
+    def __init__(self, layout):
+        self._layouts = [l for l in jax.tree.leaves(
+            layout, is_leaf=lambda x: isinstance(x, LeafLayout))]
+        self._fns: dict[int, Callable] = {}
+
+    def __call__(self, cache: dict, one: dict, slot, used: int) -> dict:
+        fn = self._fns.get(used)
+        if fn is None:
+            layouts = self._layouts
+
+            def splice(cache, one, slot):
+                cache = dict(cache)
+                pos = cache["pos"]
+                cache["pos"] = jax.lax.dynamic_update_slice(
+                    pos, one["pos"].reshape(1).astype(pos.dtype), (slot,))
+                leaves, treedef = jax.tree.flatten(cache)
+                ones = jax.tree.leaves(one)
+                assert len(leaves) == len(ones) == len(layouts), \
+                    "init_cache / cache_specs structure drift"
+                out = []
+                for buf, new, lay in zip(leaves, ones, layouts):
+                    if lay.batch_axis < 0:   # no batch axis (pos handled above)
+                        out.append(buf)
+                        continue
+                    upd = new.astype(buf.dtype)
+                    sa = lay.seq_axis
+                    if sa >= 0 and used < upd.shape[sa]:
+                        upd = jax.lax.slice_in_dim(upd, 0, used, axis=sa)
+                    starts = tuple(slot if d == lay.batch_axis else 0
+                                   for d in range(buf.ndim))
+                    out.append(jax.lax.dynamic_update_slice(buf, upd, starts))
+                return treedef.unflatten(out)
+
+            fn = self._fns[used] = jax.jit(splice)
+        return fn(cache, one, jnp.asarray(slot, jnp.int32))
+
+
+class PagePool:
+    """Fixed budget of device-resident KV pages for one model.
+
+    ``capacity`` pages of ``page`` tokens each. The pool's arrays mirror
+    the model's cache leaves (see module docstring); a page index is
+    valid across *all* pooled leaves at once — page ``p`` holds both the
+    paged-KV block and (when stored) the state snapshot taken at its end
+    position.
+    """
+
+    def __init__(self, model, *, page: int = 16, capacity: int = 256):
+        self.page = page
+        self.capacity = capacity
+        self.layout = cache_layout(model.cache_specs())
+        self.stateful = has_state_leaves(self.layout)
+        self._layouts = [l for l in jax.tree.leaves(
+            self.layout, is_leaf=lambda x: isinstance(x, LeafLayout))]
+        template = model.init_cache(1, page)
+        tleaves, self._treedef = jax.tree.flatten(template)
+        assert len(tleaves) == len(self._layouts), \
+            "init_cache / cache_specs structure drift"
+        # pooled arrays, one per cache leaf index (None where not pooled)
+        self._paged: list = [None] * len(tleaves)
+        self._state: list = [None] * len(tleaves)
+        for i, (leaf, lay) in enumerate(zip(tleaves, self._layouts)):
+            if lay.batch_axis < 0:
+                continue
+            block = list(leaf.shape)
+            del block[lay.batch_axis]
+            if lay.seq_axis >= 0:
+                # seq axis index in the block shape (after batch removal)
+                sa = lay.seq_axis - (1 if lay.batch_axis < lay.seq_axis else 0)
+                block[sa] = page
+                self._paged[i] = jnp.zeros((capacity, *block), leaf.dtype)
+            else:
+                self._state[i] = jnp.zeros((capacity, *block), leaf.dtype)
+        self._free = list(range(capacity - 1, -1, -1))
+        self._store_fns: dict = {}
+        self._state_fns: dict = {}
+        self._load_fns: dict = {}
+
+    # ------------------------------------------------------------ allocator
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """One free page id, or None when the pool is exhausted (the
+        prefix cache then evicts or drops the publish)."""
+        return self._free.pop() if self._free else None
+
+    def free(self, pid: int):
+        self._free.append(pid)
+
+    # ------------------------------------------------------------ movement
+    def _block_spec(self, i: int):
+        """(batch_axis, seq_axis-in-block) for pooled leaf i."""
+        lay = self._layouts[i]
+        sa = lay.seq_axis - (1 if lay.batch_axis < lay.seq_axis else 0)
+        return lay.batch_axis, sa
+
+    def store_pages(self, cache: dict, batch_idx: int, first_page: int,
+                    pids: list[int]):
+        """Copy ``len(pids)`` consecutive pages starting at page
+        ``first_page`` (token positions ``[first_page*page, ...)``) of
+        slot ``batch_idx`` from ``cache`` into the (arbitrary) pool
+        pages ``pids`` — paged leaves only, ONE device dispatch for the
+        whole run."""
+        n = len(pids)
+        leaves = jax.tree.leaves(cache)
+        key = (n, tuple(l.shape for l in leaves))
+        fn = self._store_fns.get(key)
+        if fn is None:
+            layouts, page = self._layouts, self.page
+            specs = [self._block_spec(i) if self._paged[i] is not None else None
+                     for i in range(len(layouts))]
+
+            def store(paged, leaves, b, s0, pids):
+                out = []
+                for pool, leaf, spec in zip(paged, leaves, specs):
+                    if pool is None:
+                        out.append(None)
+                        continue
+                    ba, sa = spec
+                    leaf = jax.lax.dynamic_index_in_dim(leaf, b, ba,
+                                                        keepdims=False)
+                    run = jax.lax.dynamic_slice_in_dim(leaf, s0, n * page,
+                                                       axis=sa)
+                    shape = list(run.shape)
+                    shape[sa:sa + 1] = [n, page]
+                    blocks = jnp.moveaxis(run.reshape(shape), sa, 0)
+                    out.append(pool.at[pids].set(blocks.astype(pool.dtype)))
+                return out
+
+            # donate the pool buffers: a publish must update its pages in
+            # place, not copy the whole capacity-sized pool per call —
+            # that copy was the admission path's TTFT tax
+            fn = self._store_fns[key] = jax.jit(store, donate_argnums=(0,))
+        new = fn(self._paged, leaves, jnp.asarray(batch_idx, jnp.int32),
+                 jnp.asarray(first_page * self.page, jnp.int32),
+                 jnp.asarray(pids, jnp.int32))
+        self._paged = [n if n is not None else o
+                       for n, o in zip(new, self._paged)]
+
+    def store_state(self, cache: dict, batch_idx: int, pid: int):
+        """Snapshot every state leaf of slot ``batch_idx`` into pool page
+        ``pid``. Only meaningful when the cache's position for that slot
+        is exactly ``(page_index+1)*page`` — the prefix cache enforces
+        that and marks the page ``state_ok``."""
+        if not any(s is not None for s in self._state):
+            return
+        leaves = jax.tree.leaves(cache)
+        key = tuple(l.shape for l in leaves)
+        fn = self._state_fns.get(key)
+        if fn is None:
+            bas = [self._layouts[i].batch_axis if self._state[i] is not None
+                   else None for i in range(len(self._layouts))]
+
+            def snap(state, leaves, b, pid):
+                out = []
+                for pool, leaf, ba in zip(state, leaves, bas):
+                    if pool is None:
+                        out.append(None)
+                        continue
+                    block = jax.lax.dynamic_index_in_dim(leaf, b, ba,
+                                                         keepdims=False)
+                    out.append(jax.lax.dynamic_update_index_in_dim(
+                        pool, block.astype(pool.dtype), pid, 0))
+                return out
+
+            fn = self._state_fns[key] = jax.jit(snap, donate_argnums=(0,))
+        new = fn(self._state, leaves, jnp.asarray(batch_idx, jnp.int32),
+                 jnp.asarray(pid, jnp.int32))
+        self._state = [n if n is not None else o
+                       for n, o in zip(new, self._state)]
+
+    def load(self, cache: dict, batch_idx: int, page_ids: list[int],
+             state_pid: Optional[int] = None) -> dict:
+        """Splice ``len(page_ids)`` cached pages into slot ``batch_idx``
+        of ``cache`` as its token prefix ``[0, n*page)``, and (for
+        stateful models) restore the state snapshot taken at the end of
+        page ``state_pid``. Returns the updated cache with ``pos`` set
+        to the cached-prefix length."""
+        n = len(page_ids)
+        leaves, treedef = jax.tree.flatten(cache)
+        key = (n, tuple(l.shape for l in leaves), state_pid is not None)
+        fn = self._load_fns.get(key)
+        if fn is None:
+            layouts, page = self._layouts, self.page
+            specs = [self._block_spec(i) if self._paged[i] is not None else None
+                     for i in range(len(layouts))]
+            bas = [l.batch_axis for l in layouts]
+            with_state = state_pid is not None
+
+            def load(paged, state, leaves, b, ids, spid):
+                out = []
+                for pool, spool, leaf, spec, ba in zip(paged, state, leaves,
+                                                       specs, bas):
+                    if spec is not None:
+                        _, sa = spec
+                        blocks = pool[ids]                     # (n, ...)
+                        blocks = jnp.moveaxis(blocks, 0, sa)   # page axis home
+                        shape = list(blocks.shape)
+                        shape[sa:sa + 2] = [n * page]
+                        run = blocks.reshape(shape)            # (..., n*page, ..)
+                        run = jnp.expand_dims(run, ba)
+                        starts = [0] * leaf.ndim
+                        starts[ba] = b
+                        leaf = jax.lax.dynamic_update_slice(
+                            leaf, run.astype(leaf.dtype), tuple(starts))
+                    elif spool is not None and with_state:
+                        block = jnp.expand_dims(spool[spid], ba)
+                        starts = [0] * leaf.ndim
+                        starts[ba] = b
+                        leaf = jax.lax.dynamic_update_slice(
+                            leaf, block.astype(leaf.dtype), tuple(starts))
+                    out.append(leaf)
+                return treedef.unflatten(out)
+
+            fn = self._load_fns[key] = jax.jit(load)
+        out = fn(self._paged, self._state, leaves,
+                 jnp.asarray(batch_idx, jnp.int32),
+                 jnp.asarray(page_ids, jnp.int32),
+                 jnp.asarray(state_pid if state_pid is not None else 0,
+                             jnp.int32))
+        pos = out["pos"]
+        n_tok = jnp.asarray(n * self.page, pos.dtype)
+        if pos.ndim == 0:
+            out["pos"] = n_tok
+        else:
+            out["pos"] = pos.at[batch_idx].set(n_tok)
+        return out

@@ -1,4 +1,5 @@
-"""Continuous batching scheduler — fused device-side decode ticks.
+"""Continuous batching scheduler — fused device-side decode ticks over
+a shared paged-KV pool with radix-tree prefix caching.
 
 Fixed decode batch of B slots over one shared KV cache. One scheduler
 tick is ONE fused, jitted device step: decode + sampling + per-slot
@@ -8,16 +9,28 @@ transfer regardless of slot count (the seed read every slot's token
 individually). An admission additionally reads its prefill token as one
 scalar at admission time, so TTFT never waits for the next full tick.
 
-Admissions use **chunked prefill**: a new request's prompt is split into
-fixed-size chunks (``prefill_chunk``) processed one per tick between
-decode steps, so a long-prompt admission never stalls in-flight decodes
-for its full prefill. The finished batch=1 cache is spliced into its
-slot with a **bucketed/paged copy**: only the pages actually used by the
-prompt are written along every "kv_seq" axis (see
-``repro.models.common.cache_axes``); recurrent-state leaves (SSM, xLSTM
-conv windows) are copied whole per slot. Per-slot positions ride in
-``cache["pos"]`` as a (B,) vector — all model decode paths accept either
-a scalar or a vector.
+**Position-stable chunked prefill.** Prompts prefill at absolute
+positions 0..n-1 in page-aligned chunks (``repro.serving.pagepool.
+chunk_plan``) — no left-padding, no power-of-two buckets — so a token
+prefix always produces bitwise-identical KV regardless of how long the
+rest of the conversation is. That is the property the prefix cache
+trades on: admission looks up the longest cached page-aligned prefix of
+the prompt in the radix tree (keyed by token-id pages under the
+request's ``cache_salt``), splices the matching pool pages straight into
+the admission cache, and chunked prefill starts *after* the cached
+prefix. A multi-turn follow-up or a shared-system-prompt query prefills
+only its suffix. Pages are published back to the tree as prefill
+completes them and again at finish/cancel for the decoded extension, so
+a session's KV outlives the session instead of being discarded with the
+slot. Chunked pacing (one ``prefill_chunk`` worth of pages per tick)
+still protects in-flight decodes from long admissions.
+
+The finished batch=1 admission cache is spliced into its slot with a
+**bucketed/paged copy**: only the pages actually used by the prompt are
+written along every "kv_seq" axis (``repro.serving.pagepool.
+SlotSplicer``); recurrent-state leaves (SSM, xLSTM conv windows) are
+copied whole per slot. Per-slot positions ride in ``cache["pos"]`` as a
+(B,) vector — all model decode paths accept either a scalar or a vector.
 
 Straggler/fault hooks: a per-request deadline; requests that exceed it
 are cancelled, their ``on_done`` fires with ``cancelled=True``, and the
@@ -35,25 +48,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import cache_axes, round_up
+from repro.models.common import cache_layout, round_up
+from repro.serving.pagepool import PagePool, SlotSplicer, chunk_plan
+from repro.serving.prefix_cache import PrefixCache, PrefixLease
 from repro.serving.sampler import GenerationParams, StopMatcher, sample_slots
 from repro.serving.tokenizer import ByteTokenizer
 
 
 def clip_prompt(ids, max_new_tokens: int, max_seq: int) -> tuple:
-    """The one capacity rule: prefill occupies the whole power-of-two
-    BUCKET the prompt is left-padded to (not just the raw prompt), and
-    decode writes ``max_new_tokens - 1`` more positions (the first token
-    comes from the prefill logits), so the invariant is
+    """The one capacity rule, kept deliberately conservative: the budget
+    charges the whole power-of-two BUCKET the prompt length rounds up to
+    (a holdover from left-padded prefill; position-stable prefill only
+    occupies ``len(ids)`` positions, so this over-reserves but can never
+    let decode write past the seq axis), and decode writes
+    ``max_new_tokens - 1`` more positions (the first token comes from
+    the prefill logits), so the invariant is
 
         bucket(len(ids)) + max_new_tokens <= max_seq + 1
 
-    — budgeting against the raw length let decode positions run past the
-    seq axis, where dynamic_update_slice silently clamps onto the last
-    position and corrupts the KV cache. Returns ``(ids, max_new_tokens)``
-    with the prompt clipped to the next bucket down and/or the budget
-    clamped when the prompt cannot shrink further. Shared by generate(),
-    the batcher admission path, and the broker's accounting."""
+    Returns ``(ids, max_new_tokens)`` with the prompt clipped to the
+    next bucket down and/or the budget clamped when the prompt cannot
+    shrink further. Shared by generate(), the batcher admission path,
+    and the broker's accounting."""
     ids = list(ids)
 
     def bucket(n):
@@ -79,6 +95,8 @@ class Request:
     on_done: Optional[Callable[["Request"], None]] = None
     deadline_s: float = 0.0          # 0 = none
     params: Optional[GenerationParams] = None   # per-request sampling/stop
+    cache_salt: str = ""             # prefix-cache tenant key (gateway auth)
+    prefix_hit_tokens: int = 0       # prefill tokens served from the cache
     submitted_at: float = field(default_factory=time.perf_counter)
     output_ids: list = field(default_factory=list)
     done: bool = False
@@ -86,6 +104,8 @@ class Request:
     finish_reason: str = ""          # "stop" | "length" | "cancelled"
     error: Optional[str] = None      # set when a scheduler fault ended it
     _stop: Optional[StopMatcher] = None
+    _lease: Optional[PrefixLease] = None   # pinned prefix-tree chain
+    _kv_ids: Optional[list] = None         # clipped prompt (KV token basis)
 
     def _matcher(self) -> Optional[StopMatcher]:
         if self._stop is None and self.params and self.params.stop:
@@ -129,12 +149,17 @@ class Request:
 
 @dataclass
 class _Admission:
-    """An in-flight chunked prefill: one chunk advances per tick."""
+    """An in-flight chunked prefill over the suffix the prefix cache
+    could not serve. ``pieces`` are the remaining page-aligned chunk
+    lengths; ``pos`` is the absolute prefill position (cached prefix
+    included)."""
     req: Request
     slot: int
     cache: dict                      # batch=1 cache being filled
-    chunks: list                     # list of equal-length token lists
-    i: int = 0
+    ids: list                        # clipped prompt (absolute token basis)
+    pieces: list                     # remaining chunk lengths
+    pos: int = 0                     # tokens prefilled so far (incl. cached)
+    lease: Optional[PrefixLease] = None
     temp: float = 0.0                # resolved per-request sampling params
     top_p: float = 1.0
     seed: int = -1                   # -1 -> shared per-tick rng
@@ -142,7 +167,8 @@ class _Admission:
 
 class ContinuousBatcher:
     def __init__(self, engine, *, slots: int = 4, max_seq: int | None = None,
-                 prefill_chunk: int = 32, page: int = 16):
+                 prefill_chunk: int = 32, page: int = 16,
+                 prefix_pages: int | None = None):
         self.engine = engine
         self.model = engine.model
         self.cfg = engine.cfg
@@ -154,7 +180,16 @@ class ContinuousBatcher:
 
         self.cache = self.model.init_cache(self.B, self.max_seq)
         self.cache["pos"] = jnp.zeros((self.B,), jnp.int32)
-        self._batch_axes, self._seq_axes = cache_axes(self.model.cache_specs())
+        self._layout = cache_layout(self.model.cache_specs())
+        self._splicer = SlotSplicer(self._layout)
+        # shared paged-KV pool + radix-tree prefix cache. The pool — not
+        # the slots — owns reusable KV memory; slots borrow pages at
+        # admission and publish their extensions back at finish.
+        if prefix_pages is None:
+            prefix_pages = getattr(engine, "prefix_cache_pages", 0)
+        self.pool = (PagePool(self.model, page=page, capacity=prefix_pages)
+                     if prefix_pages else None)
+        self.prefix = PrefixCache(self.pool) if self.pool is not None else None
         self.active: list[Optional[Request]] = [None] * self.B
         self.queue: list[Request] = []
         self._adm: Optional[_Admission] = None
@@ -176,7 +211,6 @@ class ContinuousBatcher:
         self._prefill = jax.jit(self.model.prefill_chunk)
         self._fused = jax.jit(self._make_fused())
         self._first = jax.jit(self._make_first())
-        self._splice_fns: dict[int, Callable] = {}
         self.transfers = 0           # packed reads; one per decode tick
         self.adm_transfers = 0       # scalar first-token reads; one per admission
 
@@ -232,58 +266,32 @@ class ContinuousBatcher:
 
         return first
 
-    def _get_splice(self, used: int):
-        """Jitted slot splice, specialized per bucketed prompt length:
-        leaves with a "kv_seq" axis copy only the first ``used`` positions
-        (a dynamic_update_slice over pages, not a full-leaf rewrite);
-        batch-only leaves copy the whole slot slice."""
-        fn = self._splice_fns.get(used)
-        if fn is not None:
-            return fn
-        batch_axes = jax.tree.leaves(self._batch_axes)
-        seq_axes = jax.tree.leaves(self._seq_axes)
-
-        def splice(cache, one, slot):
-            cache = dict(cache)
-            pos = cache["pos"]
-            cache["pos"] = jax.lax.dynamic_update_slice(
-                pos, one["pos"].reshape(1).astype(pos.dtype), (slot,))
-            leaves, treedef = jax.tree.flatten(cache)
-            ones = jax.tree.leaves(one)
-            assert len(leaves) == len(ones) == len(batch_axes), \
-                "init_cache / cache_specs structure drift"
-            out = []
-            for buf, new, ba, sa in zip(leaves, ones, batch_axes, seq_axes):
-                if ba < 0:           # no batch axis (pos handled above)
-                    out.append(buf)
-                    continue
-                upd = new.astype(buf.dtype)
-                if sa >= 0 and used < upd.shape[sa]:
-                    upd = jax.lax.slice_in_dim(upd, 0, used, axis=sa)
-                starts = tuple(slot if d == ba else 0 for d in range(buf.ndim))
-                out.append(jax.lax.dynamic_update_slice(buf, upd, starts))
-            return treedef.unflatten(out)
-
-        fn = jax.jit(splice)
-        self._splice_fns[used] = fn
-        return fn
-
     # ------------------------------------------------------------ admission
     def submit(self, req: Request):
         self.queue.append(req)
 
     def cancel(self, req: Request) -> bool:
         """Cancel one request wherever it currently lives: waiting in the
-        queue, mid-chunked-prefill, or active in a decode slot (the slot
-        is freed and re-admits the next queued request on the next tick).
-        Fires ``on_done`` with ``cancelled=True``. Returns False if the
-        request already finished. NOT thread-safe against a concurrent
-        ``step()`` — callers serialize (see repro.serving.broker)."""
+        queue, mid-chunked-prefill (the pages its prefill already
+        published stay in the tree; its pins are released), or active in
+        a decode slot (the slot is freed and re-admits the next queued
+        request on the next tick). Fires ``on_done`` with
+        ``cancelled=True``. Returns False if the request already
+        finished. NOT thread-safe against a concurrent ``step()`` —
+        callers serialize (see repro.serving.broker)."""
         if req.done:
             return False
         if req in self.queue:
             self.queue.remove(req)
         elif self._adm is not None and self._adm.req is req:
+            adm = self._adm
+            if adm.lease is not None and not self.pool.stateful:
+                # stateless models defer publishing to admission end —
+                # a cancelled prefill still publishes the pages it
+                # completed before dying (tree, not trash)
+                self.prefix.publish(adm.lease, adm.ids, adm.cache, 0,
+                                    kv_n=adm.pos, state_at=-1)
+            self._release_lease(req)
             self._adm = None
         else:
             for slot, r in enumerate(self.active):
@@ -297,10 +305,17 @@ class ContinuousBatcher:
             req.on_done(req)
         return True
 
+    def _release_lease(self, req: Request):
+        if req._lease is not None and self.prefix is not None:
+            self.prefix.release(req._lease)
+            req._lease = None
+
     def _advance_admissions(self):
-        """Start or advance the in-flight admission by ONE prefill chunk.
-        Called at tick start and again after reaping, so a slot freed by
-        cancellation is re-admitted on the same tick."""
+        """Start or advance the in-flight admission by one tick's worth
+        of prefill chunks (``prefill_chunk`` tokens of pages; ALL of them
+        when the batch is idle — pacing only exists to protect in-flight
+        decodes). Called at tick start and again after reaping, so a
+        slot freed by cancellation is re-admitted on the same tick."""
         if self._adm is None:
             if not self.queue:
                 return
@@ -326,23 +341,27 @@ class ContinuousBatcher:
                 return
             ids, req.max_new_tokens = clip_prompt(
                 req.prompt_ids, req.max_new_tokens, self.max_seq)
-            # left-pad to the same power-of-two bucket single-request
-            # generation uses (numerical parity), then chunk it; chunking
-            # only exists to protect in-flight decodes, so an idle batch
-            # admits in ONE bucket-sized chunk (TTFT: fewer dispatches)
-            b = self.engine._bucket(len(ids))
-            ids = [self.tokenizer.pad_id] * (b - len(ids)) + ids
-            if not any(r is not None for r in self.active):
-                size = b
-            else:
-                size = min(self.prefill_chunk, b)
-            if b % size:             # bucket capped at max_seq-1: one chunk
-                size = b
+            req._kv_ids = ids
             one = self.model.init_cache(1, self.max_seq)
+            lease = None
+            n_cached = 0
+            if self.prefix is not None:
+                # longest cached page-aligned prefix under this tenant's
+                # salt: splice its pool pages in and prefill only the
+                # suffix. The lease pins every matched page until the
+                # session finishes — eviction can never free a page a
+                # live slot still maps.
+                lease = self.prefix.begin(req.cache_salt, ids)
+                if lease.n_cached:
+                    one = self.prefix.load_into(lease, one, 0)
+                    n_cached = lease.n_cached
+            req._lease = lease
+            req.prefix_hit_tokens = n_cached
             p, sc = req.params, self.engine.sampler
             self._adm = _Admission(
-                req=req, slot=slot, cache=one,
-                chunks=[ids[i:i + size] for i in range(0, b, size)],
+                req=req, slot=slot, cache=one, ids=ids,
+                pieces=chunk_plan(n_cached, len(ids), self.page),
+                pos=n_cached, lease=lease,
                 temp=(p.temperature if p and p.temperature is not None
                       else sc.temperature),
                 top_p=p.top_p if p and p.top_p is not None else sc.top_p,
@@ -352,10 +371,25 @@ class ContinuousBatcher:
                 # cancel every in-flight session)
                 seed=(p.seed & 0x7FFFFFFF) if p and p.seed is not None else -1)
         adm = self._adm
-        chunk = jnp.asarray([adm.chunks[adm.i]], jnp.int32)
-        logits, adm.cache = self._prefill(self.engine.params, chunk, adm.cache)
-        adm.i += 1
-        if adm.i < len(adm.chunks):
+        idle = not any(r is not None for r in self.active)
+        budget = len(adm.ids) if idle else self.prefill_chunk
+        logits = None
+        while adm.pieces and budget > 0:
+            n = adm.pieces.pop(0)
+            chunk = jnp.asarray([adm.ids[adm.pos:adm.pos + n]], jnp.int32)
+            logits, adm.cache = self._prefill(self.engine.params, chunk,
+                                              adm.cache)
+            adm.pos += n
+            budget -= n
+            if adm.lease is not None and self.pool.stateful:
+                # recurrent models publish per completed page DURING
+                # prefill: the state snapshot a node needs exists only
+                # while the cache sits exactly at that page's boundary.
+                # Attention-only models defer publishing until after the
+                # first-token emission — off the TTFT path (below).
+                self.prefix.publish(adm.lease, adm.ids, adm.cache, 0,
+                                    kv_n=adm.pos, state_at=adm.pos)
+        if adm.pieces:
             return
         # prefill complete. Sample + emit the prefill token FIRST — one
         # scalar read per ADMISSION (not per slot per tick) — and only
@@ -377,18 +411,25 @@ class ContinuousBatcher:
         # splice below, or the consumer's TTFT silently re-absorbs the
         # splice + first fused tick this emission was moved ahead of
         time.sleep(0)
+        if adm.lease is not None and not self.pool.stateful:
+            # attention-only models: publish the whole prompt's pages in
+            # one batched device store, AFTER the first token left — the
+            # publish never taxes TTFT (a same-prefix session can only
+            # admit after this admission completes anyway)
+            self.prefix.publish(adm.lease, adm.ids, adm.cache, 0,
+                                kv_n=adm.pos, state_at=-1)
         if stopped or first == self.tokenizer.eos_id or req.max_new_tokens <= 1:
             req.done = True          # ended on its prefill token
             req.finish_reason = ("length" if (not stopped and
                                               first != self.tokenizer.eos_id)
                                  else "stop")
+            self._release_lease(req)
             req.flush_stop()
             if req.on_done:
                 req.on_done(req)
             return
-        used = min(round_up(sum(len(c) for c in adm.chunks), self.page),
-                   self.max_seq)
-        self.cache = self._get_splice(used)(self.cache, adm.cache, slot_arr)
+        used = min(round_up(len(adm.ids), self.page), self.max_seq)
+        self.cache = self._splicer(self.cache, adm.cache, slot, used)
         self.active[slot] = req
         self._active_m[slot] = True
         self._gen[slot] = 1          # the prefill token counts
@@ -408,6 +449,21 @@ class ContinuousBatcher:
         elif not req.finish_reason:
             req.finish_reason = ("length" if self._gen[slot] >= self._maxgen[slot]
                                  else "stop")
+        # publish the session's decoded extension back to the tree before
+        # the slot can be re-spliced (cancelled sessions included): the
+        # next turn of this conversation prefixes with exactly these
+        # tokens. KV exists for the prompt plus every output token but
+        # the last (the final sampled token was never fed back through
+        # decode). Recurrent-state snapshots are not available mid-decode
+        # (state_at=-1): those nodes become resumable once a later
+        # prefill re-crosses them at an aligned boundary and upgrades
+        # them in place.
+        if req._lease is not None and self.prefix is not None and \
+                req._kv_ids is not None:
+            kv_n = len(req._kv_ids) + max(len(req.output_ids) - 1, 0)
+            self.prefix.publish(req._lease, req._kv_ids + req.output_ids,
+                                self.cache, slot, kv_n=kv_n, state_at=-1)
+        self._release_lease(req)
         req.flush_stop(deliver=not cancelled)
         if req.on_done:
             req.on_done(req)

@@ -29,21 +29,25 @@ class FakeBackend:
     """Scripted tier backend implementing the TierBackend protocol."""
 
     def __init__(self, name, tokens, *, fail_after=None, healthy=True,
-                 cost_usd=0.0):
+                 cost_usd=0.0, prefix_hit_tokens=0):
         self.spec = TierSpec(name, f"fake-{name}", 4096)
         self.tokens = list(tokens)
         self.fail_after = fail_after      # raise after emitting this many
         self.healthy = healthy
         self.cost_usd = cost_usd
+        self.prefix_hit_tokens = prefix_hit_tokens
         self.calls = 0
 
     def health_check(self):
         return self.healthy
 
     def stream(self, messages, *, params=None, max_tokens=None, on_token=None,
-               cancel_event=None):
+               cancel_event=None, cache_salt="", on_meta=None):
         self.calls += 1
+        self.last_cache_salt = cache_salt
         gp = GenerationParams.of(params, max_tokens=max_tokens)
+        if on_meta:
+            on_meta({"prefix_hit_tokens": self.prefix_hit_tokens})
         emit = self.tokens[:gp.max_tokens]
         for i, t in enumerate(emit):
             if self.fail_after is not None and i >= self.fail_after:
@@ -55,7 +59,8 @@ class FakeBackend:
             text="".join(emit), n_prompt_tokens=7,
             n_completion_tokens=len(emit), ttft_s=0.001, total_s=0.01,
             tok_per_s=100.0, cost_usd=self.cost_usd, streamed=True,
-            finish_reason="length" if len(emit) >= gp.max_tokens else "stop")
+            finish_reason="length" if len(emit) >= gp.max_tokens else "stop",
+            prefix_hit_tokens=self.prefix_hit_tokens)
 
 
 def make_gateway(*, backends=None, rate_limit=1000, **gw_kwargs):
@@ -335,7 +340,7 @@ def test_client_disconnect_sets_cancel_event():
 
     class Slow(FakeBackend):
         def stream(self, messages, *, params=None, max_tokens=None,
-                   on_token=None, cancel_event=None):
+                   on_token=None, cancel_event=None, **kw):
             on_token(0, "t0 ")
             release.wait(5)
             cancelled["set"] = cancel_event.is_set()
@@ -459,3 +464,45 @@ def test_shim_requests_never_leave_the_pinned_tier():
     assert resp.status == 200
     assert resp.headers["x-stream-tier"] == "hpc"
     assert backend.calls == 1
+
+
+# ------------------------------------------------- prefix-cache surface
+def test_cache_header_and_per_principal_salt_stream():
+    """Streamed responses carry x-stream-cache: hit=<n> (settled by the
+    backend's on_meta before the first token), and the cache salt the
+    backend sees is derived from the authenticated principal."""
+    backends = {"local": FakeBackend("local", ["a ", "b "],
+                                     prefix_hit_tokens=48),
+                "hpc": FakeBackend("hpc", ["h "]),
+                "cloud": FakeBackend("cloud", ["c "])}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local")
+    list(resp.stream)
+    assert resp.headers["x-stream-cache"] == "hit=48"
+    assert backends["local"].last_cache_salt == "globus:tester@uic.edu"
+
+
+def test_cache_header_and_usage_meta_non_stream():
+    backends = {"local": FakeBackend("local", ["a ", "b "],
+                                     prefix_hit_tokens=16),
+                "hpc": FakeBackend("hpc", ["h "]),
+                "cloud": FakeBackend("cloud", ["c "])}
+    gw, token, _ = make_gateway(backends=backends)
+    resp = chat(gw, token, model="stream-local", stream=False)
+    assert resp.status == 200
+    assert resp.headers["x-stream-cache"] == "hit=16"
+    assert resp.body["stream"]["cache_hit_tokens"] == 16
+
+
+def test_different_principals_get_different_salts():
+    """Two tenants' requests reach the backend under different salts —
+    the engine-side guarantee that KV pages never cross an auth
+    boundary starts here."""
+    gw, token, backends = make_gateway()
+    gw.auth.globus.issue_token("other@uic.edu")
+    tok2 = gw.auth.globus.issue_token("other@uic.edu")
+    list(chat(gw, token, model="stream-local").stream)
+    salt1 = backends["local"].last_cache_salt
+    list(chat(gw, tok2, model="stream-local").stream)
+    salt2 = backends["local"].last_cache_salt
+    assert salt1 != salt2 and salt1 and salt2

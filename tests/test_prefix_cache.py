@@ -1,0 +1,279 @@
+"""Shared paged-KV pool + radix-tree prefix cache.
+
+The contract under test (docs/serving.md "Prefix caching"):
+
+* prefix-hit decode output is token-identical to cold prefill — greedy
+  AND seeded — for every model family with a KV cache (pages are
+  bitwise copies because prefill is position-stable);
+* ref-counting: concurrent sessions sharing a prefix pin the same
+  nodes; eviction never frees a page a live slot still maps;
+* cancel mid-prefill releases the session's pins, and the pages its
+  prefill already published stay in the tree;
+* pages are published back on finish (the decoded extension seeds the
+  next turn's hit) instead of discarded;
+* cache salts partition the tree — tenants never share prefixes.
+"""
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving import (ContinuousBatcher, GenerationParams, PagePool,
+                           PrefixCache, Request, ServingEngine, chunk_plan)
+
+PROMPT = "hello prefix world, this is a longer shared prompt for caching!"
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96)
+    e.warmup()
+    yield e
+    e.shutdown()
+
+
+def run_one(cb, engine, prompt, max_new=6, params=None):
+    out = {}
+    cb.submit(Request(rid="r", prompt_ids=engine.tokenizer.encode(prompt),
+                      max_new_tokens=max_new, params=params,
+                      on_done=lambda r: out.update(tokens=r.output_ids,
+                                                   hit=r.prefix_hit_tokens)))
+    cb.run_until_drained()
+    return out
+
+
+# ------------------------------------------------------------ chunk plan
+def test_chunk_plan_is_page_aligned_and_position_stable():
+    """Chunk boundaries are a pure function of absolute position: the
+    warm plan (resuming after a cached prefix) is a suffix of the cold
+    plan, so both paths run the model over identical extents."""
+    assert chunk_plan(0, 53, 16) == [16, 16, 16, 4, 1]
+    assert chunk_plan(16, 53, 16) == [16, 16, 4, 1]
+    assert chunk_plan(48, 53, 16) == [4, 1]
+    assert chunk_plan(0, 16, 16) == [16]
+    assert chunk_plan(0, 1, 16) == [1]
+    for n in range(1, 130):
+        cold = chunk_plan(0, n, 16)
+        assert sum(cold) == n
+        for cached in range(0, (n // 16) * 16 + 1, 16):
+            warm = chunk_plan(cached, n, 16)
+            assert sum(warm) == n - cached
+            assert cold[len(cold) - len(warm):] == warm  # suffix property
+
+
+# ------------------------------------------------------- token identity
+def test_warm_hit_is_token_identical_to_cold(engine):
+    solo = engine.generate(PROMPT, max_new_tokens=6)
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    cold = run_one(cb, engine, PROMPT)
+    warm = run_one(cb, engine, PROMPT)
+    assert cold["hit"] == 0 and warm["hit"] > 0
+    assert cold["tokens"] == solo.tokens
+    assert warm["tokens"] == solo.tokens
+    assert cb.prefix.stats.hits == 1
+    assert cb.prefix.stats.hit_tokens == warm["hit"]
+
+
+def test_warm_hit_token_identical_seeded(engine):
+    p = GenerationParams(max_tokens=6, temperature=0.9, seed=123)
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    cold = run_one(cb, engine, PROMPT, params=p)
+    warm = run_one(cb, engine, PROMPT, params=p)
+    assert warm["hit"] > 0
+    assert warm["tokens"] == cold["tokens"]
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "deepseek-v2-lite-16b",
+                                  "zamba2-7b", "xlstm-125m", "whisper-medium"])
+def test_prefix_hit_identity_every_family(arch):
+    """Dense attention, MLA+MoE, hybrid SSM, pure-recurrent xLSTM, and
+    encoder-decoder: a prefix hit (KV pages and/or state snapshots
+    spliced from the pool) decodes token-identically to cold prefill."""
+    cfg = get_smoke_config(arch).replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96)
+    solo = e.generate(PROMPT, max_new_tokens=5)
+    cb = ContinuousBatcher(e, slots=2, max_seq=96, prefix_pages=64)
+    cold = run_one(cb, e, PROMPT, max_new=5)
+    warm = run_one(cb, e, PROMPT, max_new=5)
+    assert cold["tokens"] == solo.tokens, arch
+    assert warm["tokens"] == solo.tokens, arch
+    assert warm["hit"] > 0, arch
+
+
+def test_multi_turn_extends_instead_of_recomputing(engine):
+    """Turn 2's prompt (turn 1 prompt + decoded response + new query)
+    hits pages covering turn 1's prompt AND its decoded extension —
+    finish publishes a session's KV back to the tree."""
+    cb = ContinuousBatcher(engine, slots=2, max_seq=128, prefix_pages=64)
+    t1 = "user: explain paged KV caches in serving systems please"
+    r1 = run_one(cb, engine, t1, max_new=12)
+    resp = engine.tokenizer.decode(r1["tokens"])
+    t2 = t1 + resp + " user: and eviction?"
+    r2 = run_one(cb, engine, t2, max_new=4)
+    n_t1 = len(engine.tokenizer.encode(t1))
+    # the hit must reach beyond the last full page of turn 1's prompt —
+    # i.e. cover decoded-response pages, not just re-used prompt pages
+    assert r2["hit"] >= (n_t1 // cb.page) * cb.page
+    assert r2["hit"] > 0
+
+
+def test_concurrent_sessions_share_prefix(engine):
+    """Sessions admitted back-to-back with a shared prefix: the first
+    publishes while the second is still queued; the second hits. Both
+    decode exactly their solo tokens (ref-counted pages are copies, not
+    aliases — no cross-session contamination)."""
+    a_prompt = PROMPT + " AAAA"
+    b_prompt = PROMPT + " BBBB"
+    solo_a = engine.generate(a_prompt, max_new_tokens=5).tokens
+    solo_b = engine.generate(b_prompt, max_new_tokens=5).tokens
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    out = {}
+    for rid, prompt in (("a", a_prompt), ("b", b_prompt)):
+        cb.submit(Request(rid=rid, prompt_ids=engine.tokenizer.encode(prompt),
+                          max_new_tokens=5,
+                          on_done=lambda r, rid=rid: out.update(
+                              {rid: (r.output_ids, r.prefix_hit_tokens)})))
+    cb.run_until_drained()
+    assert out["a"][0] == solo_a and out["b"][0] == solo_b
+    assert out["b"][1] > 0          # b reused a's shared-prefix pages
+    assert cb.prefix.stats.deduped_pages >= 0
+    # all pins returned once both sessions finished
+    def all_pins(root):
+        acc = []
+        stack = list(root.children.values())
+        while stack:
+            n = stack.pop()
+            acc.append(n.pins)
+            stack.extend(n.children.values())
+        return acc
+    assert all(p == 0 for r in cb.prefix.roots.values() for p in all_pins(r))
+
+
+def test_cancel_mid_prefill_releases_pages(engine):
+    """Cancelling a session mid-chunked-prefill releases its pins; the
+    pages its prefill already published stay in the tree and serve the
+    next session."""
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefill_chunk=16,
+                           prefix_pages=64)
+    # keep one slot decoding so admission pacing applies (idle batches
+    # burst their prefill to completion)
+    bg = Request(rid="bg", prompt_ids=engine.tokenizer.encode("background"),
+                 max_new_tokens=40)
+    cb.submit(bg)
+    cb.step()
+    assert cb.active[0] is not None
+    victim = Request(rid="victim", prompt_ids=engine.tokenizer.encode(PROMPT),
+                     max_new_tokens=8)
+    cb.submit(victim)
+    cb.step()                       # one prefill chunk -> mid-admission
+    assert cb._adm is not None and cb._adm.req is victim
+    done_pages = cb._adm.pos // cb.page
+    assert done_pages >= 1
+    lease = cb._adm.lease
+    assert cb.cancel(victim)
+    assert victim.cancelled
+    # the completed pages were published back to the tree at cancel...
+    assert cb.prefix.stats.published_pages >= done_pages
+    assert len(lease.chain) >= done_pages
+    # ...and every pin the victim held was released
+    assert lease.released
+    assert all(n.pins == 0 for n in lease.chain)
+    cb.run_until_drained()
+    # and a new identical prompt hits what the cancelled prefill left
+    warm = run_one(cb, engine, PROMPT, max_new=4)
+    assert warm["hit"] >= done_pages * cb.page
+
+
+def test_eviction_never_frees_live_pinned_pages(engine):
+    """Fill a tiny pool under a live session: eviction reclaims only
+    unpinned LRU pages; the live session's pinned chain survives and its
+    finish-publish extends it without error."""
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=6)
+    solo = engine.generate(PROMPT, max_new_tokens=10).tokens
+    # seed the tree, then hold a live session pinning the prefix
+    run_one(cb, engine, PROMPT, max_new=2)
+    live = Request(rid="live", prompt_ids=engine.tokenizer.encode(PROMPT),
+                   max_new_tokens=10)
+    out = {}
+    live.on_done = lambda r: out.update(tokens=r.output_ids,
+                                        hit=r.prefix_hit_tokens)
+    cb.submit(live)
+    cb.step()
+    assert live._lease is not None and live._lease.chain
+    pinned_pages = {n.page for n in live._lease.chain}
+    # churn unrelated prompts to exhaust the 6-page pool repeatedly
+    for i in range(4):
+        run_one(cb, engine, f"unrelated churn prompt number {i} padding text",
+                max_new=2)
+    assert cb.prefix.stats.evicted_pages > 0        # pressure was real
+    # the live session's pages were never returned to the free list
+    assert not (pinned_pages & set(cb.pool._free))
+    cb.run_until_drained()
+    assert out["hit"] > 0 and out["tokens"] == solo
+
+
+def test_salts_partition_the_tree(engine):
+    """Identical prompts under different cache salts never share pages:
+    tenant B gets a cold miss on tenant A's conversation."""
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    out = {}
+    for rid, salt in (("a", "tenant-a"), ("b", "tenant-b"), ("a2", "tenant-a")):
+        cb.submit(Request(rid=rid, prompt_ids=engine.tokenizer.encode(PROMPT),
+                          max_new_tokens=3, cache_salt=salt,
+                          on_done=lambda r, rid=rid: out.update(
+                              {rid: r.prefix_hit_tokens})))
+        cb.run_until_drained()
+    assert out["a"] == 0
+    assert out["b"] == 0            # same bytes, different tenant: MISS
+    assert out["a2"] > 0            # same tenant: hit
+    assert set(cb.prefix.roots) == {"tenant-a", "tenant-b"}
+
+
+def test_broker_surfaces_hit_and_meta(engine):
+    """The session layer reports the admission's hit: SessionResult
+    carries prefix_hit_tokens and on_meta fires before the first
+    token."""
+    events = []
+    h1 = engine.submit(PROMPT, max_new_tokens=4,
+                       on_meta=lambda m: events.append(("meta", m)),
+                       on_token=lambda t, s: events.append(("tok", t)))
+    r1 = h1.result(timeout=60)
+    h2 = engine.submit(PROMPT, max_new_tokens=4,
+                       on_meta=lambda m: events.append(("meta2", m)))
+    r2 = h2.result(timeout=60)
+    assert r1.tokens == r2.tokens
+    assert r2.prefix_hit_tokens > 0
+    assert events[0][0] == "meta"   # meta precedes the first token
+    meta2 = [e for e in events if e[0] == "meta2"][0][1]
+    assert meta2["prefix_hit_tokens"] == r2.prefix_hit_tokens
+
+
+# ------------------------------------------------------------ pool unit
+def test_pool_allocator_and_lru_eviction(engine):
+    """Tree-level accounting on a real pool: publish fills pages,
+    release makes them evictable, eviction frees LRU leaves first and
+    refuses pinned ones."""
+    pool = PagePool(engine.model, page=16, capacity=3)
+    pc = PrefixCache(pool)
+    cache = engine.model.init_cache(1, 96)
+    ids = list(range(2, 2 + 48))    # 3 full pages
+
+    lease = pc.begin("s", ids + [9])
+    assert lease.n_cached == 0
+    pc.publish(lease, ids, cache, 0, kv_n=48, state_at=-1)
+    assert pc.stats.published_pages == 3 and pool.n_free() == 0
+
+    # pool full + everything pinned -> publish drops, no eviction
+    lease2 = pc.begin("s", list(range(300, 340)))
+    pc.publish(lease2, list(range(300, 340)), cache, 0, kv_n=32, state_at=-1)
+    assert pc.stats.dropped_pages >= 1
+    assert pc.stats.evicted_pages == 0
+
+    # release the first chain: its leaf page becomes evictable
+    pc.release(lease)
+    pc.publish(lease2, list(range(300, 340)), cache, 0, kv_n=32, state_at=-1)
+    assert pc.stats.evicted_pages >= 1
+    # lease2's freshly published nodes are pinned: never evicted
+    live = {n.page for n in lease2.chain}
+    assert not (live & set(pool._free))
+    pc.release(lease2)

@@ -64,3 +64,38 @@ def test_table3_probe_stays_local():
         assert conversation_tokens(summarized) <= 32_768, f"turn {turn}"
         if turn >= 30:
             assert not raw_fits, "raw context should exceed 32K from turn 30"
+
+
+def test_summary_block_is_prefix_stable_across_turns():
+    """The emitted summary grows append-only: turn N's summary message
+    content is a byte prefix of turn N+2's, so the serving tiers' prefix
+    caches see summarization as extending — not invalidating — the
+    cached conversation (the property docs/serving.md documents)."""
+    s = TierAwareSummarizer()
+    prev = None
+    for turn in (14, 16, 20, 26, 34):
+        out, did = s.apply(turns(turn), "local")
+        assert did
+        content = out[0]["content"]
+        if prev is not None:
+            assert content.startswith(prev), "summary rewrote its prefix"
+        prev = content
+
+
+def test_tokenizer_aware_counting_matches_engine_prefill():
+    """With the system tokenizer, conversation_tokens counts exactly the
+    serialized prompt the engine prefills (one BOS, newline-joined
+    contents — core.tiers.canonical_prompt), so needed()/fits() agree
+    with the engine whatever tokenizer the system serves with."""
+    from repro.serving.tokenizer import ByteTokenizer
+    tk = ByteTokenizer(512)
+    msgs = [{"role": "user", "content": "abc"},
+            {"role": "assistant", "content": "defg"},
+            {"role": "user", "content": "hi"}]
+    joined = "\n".join(m["content"] for m in msgs)
+    assert conversation_tokens(msgs, tk) == len(tk.encode(joined))
+    # the byte heuristic coincides for the byte tokenizer (each newline
+    # separator it skips offsets one per-message surcharge)
+    assert conversation_tokens(msgs) == conversation_tokens(msgs, tk)
+    s = TierAwareSummarizer(tokenizer=tk)
+    assert s.fits(msgs, "local")

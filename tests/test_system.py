@@ -178,9 +178,12 @@ def test_gateway_alias_hits_each_tier(system):
         chunks = parse_sse("".join(resp.stream))
         assert resp.status == 200
         assert resp.headers["x-stream-tier"] == tier, alias
-        content = [c["choices"][0]["delta"].get("content", "")
-                   for c in chunks if c.get("choices")]
-        assert sum(1 for c in content if c) == 4            # one frame/token
+        # one frame per generated token after the role preamble (a
+        # random-init model may emit ids outside the byte range, whose
+        # delta text is empty — the frame still arrives)
+        frames = [c for c in chunks if c.get("choices")
+                  and c["choices"][0].get("finish_reason") is None]
+        assert len(frames) - 1 == 4, alias                  # one frame/token
 
 
 def test_gateway_non_stream_metadata_headers(system):
@@ -211,3 +214,38 @@ def test_gateway_params_thread_to_hpc_remote_fn(system):
     # and the params dict crossed the control plane without secrets
     rec = system.endpoint.task_records()[-1]
     assert rec.kwargs["gen_params"]["seed"] == 21
+
+
+def test_gateway_prefix_cache_hit_multi_turn(system):
+    """A repeated conversation through the real gateway hits the serving
+    tier's prefix cache: the second turn's x-stream-cache header reports
+    a non-zero hit, pinned per principal, and the response is identical
+    to the cold one (greedy). Covers the dual-channel HPC tier too —
+    the hit rides the relay in-band as a meta message."""
+    tok = system.globus.issue_token("cache@uic.edu")
+    convo = "repeat this exact longer conversation so the pages align"
+    req = {"model": "stream-local", "max_tokens": 4, "stream": False,
+           "messages": [{"role": "user", "content": convo}]}
+    r1 = system.gateway.handle_chat_completions(req, bearer=tok)
+    r2 = system.gateway.handle_chat_completions(dict(req), bearer=tok)
+    assert r1.status == r2.status == 200
+    hit1 = int(r1.headers["x-stream-cache"].split("=")[1])
+    hit2 = int(r2.headers["x-stream-cache"].split("=")[1])
+    assert hit1 == 0 and hit2 > 0
+    assert r1.body["choices"][0]["message"]["content"] == \
+        r2.body["choices"][0]["message"]["content"]
+    assert r2.body["stream"]["cache_hit_tokens"] == hit2
+
+    # a different principal never hits the first tenant's pages
+    tok_b = system.globus.issue_token("other-tenant@uic.edu")
+    r3 = system.gateway.handle_chat_completions(dict(req), bearer=tok_b)
+    assert int(r3.headers["x-stream-cache"].split("=")[1]) == 0
+
+    # dual-channel HPC: the hit crosses the control plane + relay
+    hreq = {"model": "stream-hpc", "max_tokens": 4, "stream": True,
+            "messages": [{"role": "user", "content": convo}]}
+    s1 = system.gateway.handle_chat_completions(hreq, bearer=tok)
+    list(s1.stream)
+    s2 = system.gateway.handle_chat_completions(dict(hreq), bearer=tok)
+    list(s2.stream)
+    assert int(s2.headers["x-stream-cache"].split("=")[1]) > 0
