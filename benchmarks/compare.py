@@ -1,0 +1,122 @@
+"""Benchmark regression gate: compare a ``BENCH_ci.json`` produced by
+``benchmarks/run.py --ci`` against the committed
+``benchmarks/baselines.json`` and exit nonzero when any metric
+regresses by more than the threshold (default 15%).
+
+Each metric has a direction: for ``higher``-is-better metrics a
+regression is the current value falling below ``baseline * (1 - t)``;
+for ``lower``-is-better, rising above ``baseline * (1 + t)``. A
+baseline at (or within epsilon of) zero can't anchor a ratio — there
+the gate becomes absolute: a lower-is-better metric must stay within
+epsilon of zero (``bytes_copied_per_admission`` is the motivating case:
+its baseline IS 0.0, and any nonzero value means the zero-copy
+admission path silently fell back to splicing — a regression at 1 byte,
+not at 15%).
+
+Improvements are reported but never gate; unknown metrics in the
+current file are ignored (new metrics land with a baseline in the same
+PR); metrics missing FROM the current file fail — a benchmark that
+stopped producing a number is a regression too.
+
+Usage: python benchmarks/compare.py BENCH_ci.json [baselines.json]
+       [--threshold 0.15]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# metric -> which direction is better. Every gated metric must be
+# listed: direction is semantics, not data, and does not belong in the
+# baseline file.
+DIRECTIONS = {
+    "bg_decode_retention": "higher",
+    "agg_speedup_16_sessions": "higher",
+    "warm_over_cold_ttft": "lower",
+    "gateway_ttft_ratio": "lower",
+    "bytes_copied_per_admission": "lower",
+}
+
+EPS = 1e-9
+
+
+def compare(current: dict, baseline: dict, threshold: float = 0.15) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures = []
+    cur = current.get("metrics", current)
+    base = baseline.get("metrics", baseline)
+    for name, b in base.items():
+        direction = DIRECTIONS.get(name)
+        if direction is None:
+            failures.append(f"{name}: no direction registered in compare.py "
+                            "(add it alongside the baseline)")
+            continue
+        if name not in cur:
+            failures.append(f"{name}: missing from current run "
+                            f"(baseline {b:.6g})")
+            continue
+        c = float(cur[name])
+        if abs(b) <= EPS:
+            # zero baseline: ratios are meaningless, gate absolutely
+            if direction == "lower" and c > EPS:
+                failures.append(f"{name}: {c:.6g} > 0 (baseline is exactly "
+                                "0; any nonzero value is a regression)")
+            elif direction == "higher" and c < -EPS:
+                failures.append(f"{name}: {c:.6g} fell below zero baseline")
+            continue
+        ratio = c / b
+        if direction == "higher" and ratio < 1.0 - threshold:
+            failures.append(f"{name}: {c:.6g} vs baseline {b:.6g} "
+                            f"({(1 - ratio) * 100:.1f}% worse, "
+                            f"limit {threshold * 100:.0f}%)")
+        elif direction == "lower" and ratio > 1.0 + threshold:
+            failures.append(f"{name}: {c:.6g} vs baseline {b:.6g} "
+                            f"({(ratio - 1) * 100:.1f}% worse, "
+                            f"limit {threshold * 100:.0f}%)")
+    return failures
+
+
+def main(argv: list) -> int:
+    args = [a for a in argv if not a.startswith("--")]
+    threshold = 0.15
+    if "--threshold" in argv:
+        threshold = float(argv[argv.index("--threshold") + 1])
+        args = [a for a in args if a != str(threshold)]
+    cur_path = args[0] if args else "BENCH_ci.json"
+    base_path = (args[1] if len(args) > 1 else
+                 os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "baselines.json"))
+    with open(cur_path) as f:
+        current = json.load(f)
+    with open(base_path) as f:
+        baseline = json.load(f)
+
+    cur = current.get("metrics", current)
+    base = baseline.get("metrics", baseline)
+    print(f"{'metric':<32s} {'baseline':>12s} {'current':>12s} {'dir':>6s}")
+    for name in sorted(set(base) | set(cur)):
+        b = base.get(name)
+        c = cur.get(name)
+        print(f"{name:<32s} "
+              f"{b if b is not None else '-':>12.6g} "
+              f"{c if c is not None else '-':>12.6g} "
+              f"{DIRECTIONS.get(name, '?'):>6s}"
+              if b is not None and c is not None else
+              f"{name:<32s} {str(b):>12s} {str(c):>12s} "
+              f"{DIRECTIONS.get(name, '?'):>6s}")
+
+    failures = compare(current, baseline, threshold)
+    if failures:
+        print(f"\nFAIL: {len(failures)} metric(s) regressed "
+              f"beyond {threshold * 100:.0f}%:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"\nOK: no metric regressed beyond {threshold * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,10 +1,81 @@
 """Benchmark harness — one function per paper table + the roofline
-report. Prints a final ``name,value,derived`` CSV summary."""
+report. Prints a final ``name,value,derived`` CSV summary.
+
+``--ci`` runs the regression subset instead: five serving-path metrics
+written to ``BENCH_ci.json`` for ``benchmarks/compare.py`` to gate
+against ``benchmarks/baselines.json`` (>15% regression on any metric
+fails the build). The subset is sized for a CPU CI runner, so absolute
+numbers are noisy — compare.py checks ratios against a baseline
+captured on the same class of machine, not paper targets.
+"""
 
 from __future__ import annotations
 
+import json
 import sys
 import time
+
+
+def run_ci(out_path: str = "BENCH_ci.json") -> dict:
+    """The five regression-gated serving metrics (see compare.py for
+    each metric's better-direction):
+
+    * ``bg_decode_retention`` — background decode tok/s retained while
+      long-prompt admissions churn (chunked prefill + fused tick);
+    * ``agg_speedup_16_sessions`` — 16 concurrent proxy sessions,
+      aggregate tok/s over the serial backend;
+    * ``warm_over_cold_ttft`` — multi-turn TTFT with the prefix cache
+      on vs off at a 512-token shared prefix;
+    * ``gateway_ttft_ratio`` — OpenAI-gateway TTFT over direct-engine
+      TTFT for the local tier;
+    * ``bytes_copied_per_admission`` — device bytes moved by KV
+      splice/store plumbing per admitted session; the paged decode
+      path's headline number, exactly 0 by construction.
+    """
+    t0 = time.perf_counter()
+
+    from benchmarks import batch_throughput
+    r_int = batch_throughput.run_interference(n_admissions=4, repeats=3,
+                                              quiet=True)
+
+    from benchmarks import concurrency
+    r_cc = concurrency.run(concurrency=(1, 16), tokens=8, repeats=2,
+                           quiet=True)
+
+    from benchmarks import prefix_cache
+    r_mt = prefix_cache.run_multi_turn(prefix_tokens=512, turns=2,
+                                       repeats=2, quiet=True)
+    r_bc = prefix_cache.run_bytes_copied(n_sessions=4, quiet=True)
+
+    from benchmarks import gateway
+    r_gw = gateway.run(tokens=8, repeats=5, n_routed=9, quiet=True)
+
+    metrics = {
+        "bg_decode_retention": r_int["retention"],
+        "agg_speedup_16_sessions": r_cc["summary"]["speedup_at_max"],
+        "warm_over_cold_ttft": r_mt["warm_over_cold_best"],
+        "gateway_ttft_ratio": r_gw["overhead_ratio"],
+        "bytes_copied_per_admission":
+            r_bc["paged"]["bytes_per_admission"],
+    }
+    out = {
+        "metrics": metrics,
+        "detail": {
+            "bg_tok_s_quiet": r_int["bg_tok_s_quiet"],
+            "bg_tok_s_under_admissions": r_int["bg_tok_s_under_admissions"],
+            "bytes_copied_per_admission_contiguous":
+                r_bc["contiguous"]["bytes_per_admission"],
+            "prefix_hit_tokens": r_mt["hit_tokens_total"],
+        },
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\n=== CI metrics (written to {out_path}, "
+          f"{out['wall_s']:.0f}s) ===")
+    for name, val in metrics.items():
+        print(f"{name},{val}")
+    return out
 
 
 def main() -> None:
@@ -103,4 +174,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--ci" in sys.argv:
+        run_ci()
+    else:
+        main()

@@ -80,6 +80,30 @@ def decode_attention(q, k, v, *, kv_len, scale=None, logit_soft_cap=0.0,
                                interpret=interpret, block_k=block_k)
 
 
+def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
+                    logit_soft_cap=0.0, impl="ref", interpret=False):
+    """Paged decode attention: q (B,Hq,1,D) against pooled KV pages
+    (P,Hkv,page,D) addressed through per-slot block tables (B,n_pages).
+    The ref path gathers the pages into a contiguous view; the Pallas
+    path DMAs pages inside the kernel via scalar-prefetched tables."""
+    if _resolve(impl) == "ref":
+        return _ref.paged_attention(q, k_pages, v_pages,
+                                    block_tables=block_tables, kv_len=kv_len,
+                                    scale=scale, logit_soft_cap=logit_soft_cap)
+    from repro.kernels import paged_attention as _k
+    return _k.paged_attention(q, k_pages, v_pages, block_tables=block_tables,
+                              kv_len=kv_len, scale=scale,
+                              logit_soft_cap=logit_soft_cap, interpret=interpret)
+
+
+def gather_kv_pages(pages, block_tables):
+    """Pool pages (P,H,page,D) or (P,page,r) + tables (B,n) -> the
+    contiguous per-slot view (B,H,n*page,D) / (B,n*page,r). Used by the
+    chunked-prefill and MLA paged paths, which reuse the contiguous
+    attention math on the gathered view."""
+    return _ref.gather_kv_pages(pages, block_tables)
+
+
 # -- mamba2 ssd ------------------------------------------------------------
 
 def ssd(x, dt, A, B, C, D, *, chunk=64, h0=None, impl="ref", interpret=False):

@@ -78,6 +78,39 @@ def decode_attention(q, k, v, *, kv_len, scale=None, logit_soft_cap: float = 0.0
                logit_soft_cap=logit_soft_cap)
 
 
+def gather_kv_pages(pages, block_tables):
+    """Materialize per-slot contiguous KV from pooled pages.
+
+    pages: (P, Hkv, page, D) — the pool buffer, page id on axis 0 —
+    or any rank with the page-token axis second-to-last (MLA latent
+    pools are (P, page, r)); block_tables: (B, n_pages) int32 page ids.
+    Returns (B, Hkv, n_pages * page, D) / (B, n_pages * page, r) —
+    slot ``b``'s KV laid out contiguously in token order (garbage
+    beyond the slot's kv_len; the caller masks).
+    """
+    page = pages.shape[-2]
+    B, n = block_tables.shape
+    g = pages[block_tables]                     # (B, n, *mid, page, last)
+    g = jnp.moveaxis(g, 1, -3)                  # (B, *mid, n, page, last)
+    return g.reshape(*g.shape[:-3], n * page, g.shape[-1])
+
+
+def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
+                    logit_soft_cap: float = 0.0):
+    """Paged decode attention, pure-jnp oracle: gather the block-table
+    row into a contiguous (B, Hkv, S, D) view, then run the standard
+    decode attention. The Pallas kernel performs the same gather
+    page-by-page inside the kernel via scalar-prefetched block tables.
+
+    q: (B, Hq, 1, D); k_pages, v_pages: (P, Hkv, page, D);
+    block_tables: (B, n_pages); kv_len: scalar or (B,).
+    """
+    k = gather_kv_pages(k_pages, block_tables).astype(q.dtype)
+    v = gather_kv_pages(v_pages, block_tables).astype(q.dtype)
+    return decode_attention(q, k, v, kv_len=kv_len, scale=scale,
+                            logit_soft_cap=logit_soft_cap)
+
+
 def mha_chunked(q, k, v, *, causal: bool = True, scale=None,
                 logit_soft_cap: float = 0.0, chunk_q: int = 512):
     """Exact attention computed in query chunks (flash-style memory

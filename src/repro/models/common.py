@@ -265,6 +265,30 @@ class LeafLayout:
     batch_axis: int        # -1 when absent
     seq_axis: int          # -1 when absent
 
+    @property
+    def paged(self) -> bool:
+        return self.seq_axis >= 0
+
+    @property
+    def state(self) -> bool:
+        return self.batch_axis >= 0 and self.seq_axis < 0
+
+    def pool_shape(self, leaf_shape, page: int, n_pages: int) -> tuple:
+        """Paged-attention view of this leaf: the pool buffer that backs
+        it. The decode-slot batch axis becomes the pool-page axis
+        (``n_pages`` entries) and the "kv_seq" axis is clipped to one
+        ``page`` — e.g. k ``(L, B, Hkv, S, D)`` pools as
+        ``(L, P, Hkv, page, D)``. Keeping every other axis in place is
+        what lets the models' scan-over-layers and attention code run
+        unchanged against pool buffers: a layer slice of the pool has
+        the same rank and axis order as a layer slice of a contiguous
+        cache, with (batch -> page id, seq -> in-page offset)."""
+        assert self.paged and self.batch_axis < self.seq_axis, self
+        s = list(leaf_shape)
+        s[self.batch_axis] = n_pages
+        s[self.seq_axis] = page
+        return tuple(s)
+
 
 def cache_layout(specs):
     """cache_specs() tree -> same-structure tree of :class:`LeafLayout`.

@@ -132,7 +132,8 @@ def update_cache_at(buf, new, idx, axis: int):
 
 
 def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
-              kv_len=None, context=None, logit_soft_cap=0.0, chunked=False):
+              kv_len=None, context=None, logit_soft_cap=0.0, chunked=False,
+              block_tables=None):
     """GQA attention. Four modes:
 
       * full/prefill:  cache is None        -> causal self-attention; if
@@ -147,6 +148,14 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
                        continuous batcher.
       * cross:         context=(B, Sc, D) encoder/vision states -> K/V from
                        context, no causal mask, no rope.
+
+    ``block_tables`` (B, n_pages) switches the decode and chunked modes
+    to the **paged** layout: cache=(k_pages, v_pages) are pool buffers
+    (P, Hkv, page, D) shared by every slot, addressed per token page
+    through the table. Writes scatter to (page id, in-page offset);
+    decode attends via ops.paged_attention (in-kernel gather on the
+    Pallas path). Position 0 of an all-zero table row resolves to the
+    pool's reserved trash page, so masked slots write harmlessly.
     """
     B, S, _ = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -168,7 +177,35 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
     v = shard_as(v, "batch", "kv_heads", "kv_seq", None)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        ck, cv = cache                      # pool pages (P, Hkv, page, D)
+        page = ck.shape[2]
+        if S == 1:  # paged decode: scatter to (page id, offset) per slot
+            pos = jnp.asarray(cache_index).reshape(-1)            # (B,)
+            pid = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                                      axis=1)[:, 0]
+            off = pos % page
+            ck = ck.at[pid, :, off, :].set(k[:, :, 0, :].astype(ck.dtype))
+            cv = cv.at[pid, :, off, :].set(v[:, :, 0, :].astype(cv.dtype))
+            new_cache = (ck, cv)
+            out = ops.paged_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                      block_tables=block_tables,
+                                      kv_len=pos + 1, impl=impl,
+                                      logit_soft_cap=logit_soft_cap)
+        else:  # paged chunked prefill: chunk_plan keeps chunks in one page
+            assert chunked and B == 1
+            pid = block_tables[0, cache_index // page]
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (pid, 0, cache_index % page, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (pid, 0, cache_index % page, 0))
+            new_cache = (ck, cv)
+            gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
+            gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
+            out = ops.chunk_attention(q, gk, gv, q_offset=cache_index,
+                                      kv_len=cache_index + S, impl=impl,
+                                      logit_soft_cap=logit_soft_cap)
+    elif cache is not None:
         ck, cv = cache
         if S == 1:  # decode: write at cache_index (scalar or per-slot vector)
             ck = update_cache_at(ck, k, cache_index, axis=2)

@@ -82,15 +82,16 @@ class TransformerLM:
 
     # ------------------------------------------------------------------ blocks
     def _attn(self, x, bp, *, positions, cache=None, cache_index=None,
-              chunked=False):
+              chunked=False, block_tables=None):
         cfg = self.cfg
         if cfg.use_mla:
             return mla_mod.mla_attention(x, bp, cfg, positions=positions,
                                          cache=cache, cache_index=cache_index,
-                                         absorbed=self.mla_absorbed, chunked=chunked)
+                                         absorbed=self.mla_absorbed, chunked=chunked,
+                                         block_tables=block_tables)
         return layers.attention(x, bp, cfg, positions=positions,
                                 cache=cache, cache_index=cache_index,
-                                chunked=chunked)
+                                chunked=chunked, block_tables=block_tables)
 
     def _mlp(self, x, bp, moe_block: bool, is_eval: bool):
         cfg = self.cfg
@@ -100,7 +101,7 @@ class TransformerLM:
         return layers.mlp(x, bp, cfg)
 
     def _block(self, x, bp, *, positions, cache=None, cache_index=None,
-               moe_block=True, is_eval=False, chunked=False):
+               moe_block=True, is_eval=False, chunked=False, block_tables=None):
         cfg = self.cfg
         h = layers.rmsnorm(x, bp["ln1"], cfg)
         if cache is None:
@@ -109,7 +110,7 @@ class TransformerLM:
         else:
             a, new_cache = self._attn(h, bp["attn"], positions=positions,
                                       cache=cache, cache_index=cache_index,
-                                      chunked=chunked)
+                                      chunked=chunked, block_tables=block_tables)
         x = x + a
         x = x + self._mlp(layers.rmsnorm(x, bp["ln2"], cfg), bp["mlp"], moe_block,
                           is_eval or cache is not None)
@@ -255,12 +256,15 @@ class TransformerLM:
         new_cache = dict(cache)
         every = cfg.cross_attn_every
         cross_kv = (cache.get("cross_k"), cache.get("cross_v")) if self.has_cross else None
+        # paged serving mode: cache leaves are pool pages addressed
+        # through per-slot block tables (carried through unchanged)
+        bt = cache.get("block_tables")
 
         for i in range(cfg.first_dense_layers):
             x, val = self._block(x, params[f"dense{i}"], positions=positions,
                                  cache=self._dense_cache(cache, i),
                                  cache_index=cache_index, moe_block=False,
-                                 chunked=chunked)
+                                 chunked=chunked, block_tables=bt)
             new_cache = self._store_dense(new_cache, i, val)
 
         if cfg.use_mla:
@@ -273,7 +277,8 @@ class TransformerLM:
         def body(x, inp):
             bp, idx, lc = inp
             x, nc = self._block(x, bp, positions=positions, cache=lc,
-                                cache_index=cache_index, chunked=chunked)
+                                cache_index=cache_index, chunked=chunked,
+                                block_tables=bt)
             if cross_kv is not None and cross_kv[0] is not None:
                 def do_cross(x):
                     inv = idx // every

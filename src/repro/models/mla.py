@@ -48,12 +48,20 @@ def _norm(x, w, eps):
 
 
 def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
-                  absorbed: bool = False, chunked: bool = False):
+                  absorbed: bool = False, chunked: bool = False,
+                  block_tables=None):
     """x (B, S, D). cache = (c_kv (B, Smax, r), k_rope (B, Smax, dr)) or None.
 
     ``chunked`` (S > 1, cache given): the tokens are a prompt chunk whose
     first position is ``cache_index`` — latents are written at that offset
     and the chunk attends against the cached prefix plus itself.
+
+    ``block_tables`` (B, n_pages): paged layout — cache leaves are pool
+    buffers (P, page, r) / (P, page, dr) shared across slots; latents
+    scatter to (page id, in-page offset) and attention runs on the
+    gathered per-slot view. The compressed latent is tiny (r + dr per
+    token), so the gather is cheap and both decode paths (absorbed and
+    naive) reuse the contiguous math unchanged.
 
     Returns y (or (y, new_cache) when cache is given).
     """
@@ -73,7 +81,30 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
     k_rope = apply_rope((x @ p["wkr"].astype(x.dtype))[:, None], cos, sin)[:, 0]  # (B,S,dr)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        cc, cr = cache                       # latent pool pages (P, page, r)
+        page = cc.shape[1]
+        if S == 1:  # paged decode: scatter latents to (page id, offset)
+            pos = jnp.asarray(cache_index).reshape(-1)             # (B,)
+            pid = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                                      axis=1)[:, 0]
+            off = pos % page
+            cc = cc.at[pid, off, :].set(c_kv[:, 0, :].astype(cc.dtype))
+            cr = cr.at[pid, off, :].set(k_rope[:, 0, :].astype(cr.dtype))
+            kv_len = pos + 1
+        else:  # paged chunked prefill (chunk_plan keeps chunks in one page)
+            assert chunked and B == 1
+            pid = block_tables[0, cache_index // page]
+            cc = jax.lax.dynamic_update_slice(
+                cc, c_kv.astype(cc.dtype), (pid, cache_index % page, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cr, k_rope.astype(cr.dtype), (pid, cache_index % page, 0))
+            kv_len = cache_index + S
+        new_cache = (cc, cr)
+        kv_latent = ops.gather_kv_pages(cc, block_tables).astype(x.dtype)
+        k_rope_all = ops.gather_kv_pages(cr, block_tables).astype(x.dtype)
+        Skv = kv_latent.shape[1]
+    elif cache is not None:
         from repro.models.layers import update_cache_at
         cc, cr = cache
         at = cache_index if (S == 1 or chunked) else 0

@@ -58,7 +58,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, *, params=None, rng=None,
                  max_seq: int = 256, sampler: SamplerConfig | None = None,
                  scheduler_slots: int = 4, prefill_chunk: int = 32,
-                 page: int = 16, prefix_cache_pages: int = 256):
+                 page: int = 16, prefix_cache_pages: int = 256,
+                 paged_kv: bool = True):
         self.cfg = cfg
         self.model = build_model(cfg)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -71,6 +72,11 @@ class ServingEngine:
         # cache (0 disables prefix caching; per-slot buffers still work)
         self.page = page
         self.prefix_cache_pages = prefix_cache_pages
+        # native paged decode in the continuous batcher (attention-only
+        # models; see serving/scheduler.py). False pins the batcher to
+        # the contiguous splice path — kept as the A/B lever the
+        # bytes-copied-per-admission benchmark flips.
+        self.paged_kv = paged_kv
 
         self._prefill_chunk = jax.jit(self.model.prefill_chunk)
         self._decode = jax.jit(self.model.decode_step)

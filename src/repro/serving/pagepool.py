@@ -10,26 +10,39 @@ sessions, turns, and tenants (under distinct cache salts) share prefix
 KV instead of recomputing it.
 
 Layout is derived from the model's ``cache_specs()`` contract
-(:func:`repro.models.common.cache_layout`): for every cache leaf with a
-``"kv_seq"`` axis the pool holds ``(capacity, ...page-block...)`` — the
-batch axis replaced by the pool-page axis and the sequence axis clipped
-to one page — and for every *state* leaf (batch axis but no ``"kv_seq"``:
-SSM h0 / conv windows, xLSTM cells, cross-attention K/V) it holds a
-per-page snapshot of the whole leaf, valid only at the exact token
-position it was taken. Leaves without a batch axis (the ``"pos"``
-scalar) are not pooled.
+(:meth:`repro.models.common.LeafLayout.pool_shape`): every cache leaf
+with a ``"kv_seq"`` axis pools as the leaf shape with its batch axis
+replaced by the pool-page axis and its sequence axis clipped to one
+page — e.g. k ``(L, B, Hkv, S, D)`` pools as ``(L, P, Hkv, page, D)``.
+Keeping the page axis where the slot axis was is what lets the paged
+decode path (``kernels/paged_attention``) run the models' scan-over-
+layers and attention code directly against pool buffers, with per-slot
+block tables mapping token pages to pool page ids. For every *state*
+leaf (batch axis but no ``"kv_seq"``: SSM h0 / conv windows, xLSTM
+cells, cross-attention K/V) the pool holds a per-page snapshot of the
+whole leaf, valid only at the exact token position it was taken. Leaves
+without a batch axis (the ``"pos"`` scalar) are not pooled.
+
+**Page id 0 is the reserved trash page.** The batcher's fused tick
+masks finished slots by parking them at position 0 with an all-zero
+block-table row, so their dead (masked, never read) decode writes land
+on page 0 instead of corrupting a live page. ``alloc`` never hands out
+page 0 and ``free`` rejects it.
 
 Everything here is **position-stable**: pages are pure functions of the
 token ids they cover because the serving layer prefills prompts at
 absolute positions 0..n-1 in page-aligned chunks (no left-padding, no
-power-of-two buckets) — see :func:`chunk_plan`. A page copied out of the
-pool is therefore bitwise the KV a cold prefill would have computed.
+power-of-two buckets) — see :func:`chunk_plan`. A page in the pool is
+therefore bitwise the KV a cold prefill would have computed.
 
-The pool is a dumb allocator: ``alloc``/``free`` manage the free list,
-``store_page``/``store_state``/``load`` move page-sized blocks between a
-session cache (any batch size) and the pool. Refcounts, pinning, LRU and
-the token-key radix tree live in the prefix cache, which is the pool's
-only client.
+The pool is a dumb allocator: ``alloc``/``free`` manage the free list
+(``free`` asserts against double-frees and, via ``free_guard``, against
+release-ordering bugs — reclaiming a page the prefix tree still
+references), ``store_pages``/``store_state``/``load`` move page-sized
+blocks between a contiguous session cache and the pool (the legacy
+splice path, still used by stateful models), and ``paged_cache`` hands
+the pool buffers to the batcher as a zero-copy decode cache. Refcounts,
+pinning, LRU and the token-key radix tree live in the prefix cache.
 """
 
 from __future__ import annotations
@@ -40,6 +53,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import LeafLayout, cache_layout, has_state_leaves
+
+TRASH_PAGE = 0
 
 
 def chunk_plan(n_cached: int, n_total: int, page: int) -> list[int]:
@@ -52,8 +67,11 @@ def chunk_plan(n_cached: int, n_total: int, page: int) -> list[int]:
     prefix-hit resume (``n_cached`` = some page multiple) therefore run
     the model over *identical* chunk extents for every position they
     both compute — which is what makes warm decode token-identical to
-    cold decode, not merely close. Bounded compile variants: ``(1,
-    page)`` plus ``(1, 2^k)`` for ``2^k < page``.
+    cold decode, not merely close. Every chunk also lies inside a single
+    page (full pages are page-aligned; the sub-page tail never crosses
+    the final page boundary), which is what lets paged prefill write
+    each chunk through the block table with one in-page store. Bounded
+    compile variants: ``(1, page)`` plus ``(1, 2^k)`` for ``2^k < page``.
     """
     assert n_cached % page == 0, (n_cached, page)
     pieces = []
@@ -71,19 +89,29 @@ def chunk_plan(n_cached: int, n_total: int, page: int) -> list[int]:
 
 
 class SlotSplicer:
-    """Jitted batch=1 -> slot cache splice, shared by the continuous
-    batcher's admission path and ``ServingEngine.generate_batch``.
+    """Jitted batch=1 -> slot cache splice, shared by the contiguous
+    admission path (stateful models) and ``ServingEngine.generate_batch``.
     Specialized per used-length: leaves with a ``"kv_seq"`` axis copy
     only the first ``used`` positions; batch-only leaves copy the whole
     slot slice; leaves without a batch axis are untouched (``"pos"`` is
-    spliced explicitly from the source's scalar)."""
+    spliced explicitly from the source's scalar). ``bytes_copied``
+    accumulates the splice traffic (the admission-copy cost the paged
+    decode path eliminates)."""
 
     def __init__(self, layout):
         self._layouts = [l for l in jax.tree.leaves(
             layout, is_leaf=lambda x: isinstance(x, LeafLayout))]
         self._fns: dict[int, Callable] = {}
+        self.bytes_copied = 0
 
     def __call__(self, cache: dict, one: dict, slot, used: int) -> dict:
+        for leaf, lay in zip(jax.tree.leaves(one), self._layouts):
+            if lay.batch_axis < 0:
+                continue
+            n = leaf.size
+            if lay.seq_axis >= 0 and used < leaf.shape[lay.seq_axis]:
+                n = (n // leaf.shape[lay.seq_axis]) * used
+            self.bytes_copied += n * leaf.dtype.itemsize
         fn = self._fns.get(used)
         if fn is None:
             layouts = self._layouts
@@ -118,11 +146,11 @@ class SlotSplicer:
 class PagePool:
     """Fixed budget of device-resident KV pages for one model.
 
-    ``capacity`` pages of ``page`` tokens each. The pool's arrays mirror
-    the model's cache leaves (see module docstring); a page index is
-    valid across *all* pooled leaves at once — page ``p`` holds both the
-    paged-KV block and (when stored) the state snapshot taken at its end
-    position.
+    ``capacity`` allocatable pages of ``page`` tokens each (the buffers
+    hold ``capacity + 1`` entries; index 0 is the reserved trash page).
+    A page index is valid across *all* pooled leaves at once — page
+    ``p`` holds both the paged-KV block and (when stored) the state
+    snapshot taken at its end position.
     """
 
     def __init__(self, model, *, page: int = 16, capacity: int = 256):
@@ -139,19 +167,29 @@ class PagePool:
         # pooled arrays, one per cache leaf index (None where not pooled)
         self._paged: list = [None] * len(tleaves)
         self._state: list = [None] * len(tleaves)
+        self._page_bytes = 0         # device bytes one page spans (paged leaves)
+        self._state_bytes = 0        # device bytes one state snapshot spans
         for i, (leaf, lay) in enumerate(zip(tleaves, self._layouts)):
             if lay.batch_axis < 0:
                 continue
-            block = list(leaf.shape)
-            del block[lay.batch_axis]
             if lay.seq_axis >= 0:
-                # seq axis index in the block shape (after batch removal)
-                sa = lay.seq_axis - (1 if lay.batch_axis < lay.seq_axis else 0)
-                block[sa] = page
-                self._paged[i] = jnp.zeros((capacity, *block), leaf.dtype)
+                shape = lay.pool_shape(leaf.shape, page, capacity + 1)
+                self._paged[i] = jnp.zeros(shape, leaf.dtype)
+                self._page_bytes += leaf.size * leaf.dtype.itemsize
             else:
-                self._state[i] = jnp.zeros((capacity, *block), leaf.dtype)
-        self._free = list(range(capacity - 1, -1, -1))
+                block = list(leaf.shape)
+                del block[lay.batch_axis]
+                self._state[i] = jnp.zeros((capacity + 1, *block), leaf.dtype)
+                self._state_bytes += leaf.size * leaf.dtype.itemsize
+        self._free = list(range(capacity, 0, -1))   # never hands out page 0
+        self._free_set = set(self._free)
+        self._detached = False       # paged_cache() transferred the buffers
+        # Release-ordering guard: the prefix cache registers a predicate
+        # over "does the tree still reference this page"; free() asserts
+        # it is False — reclaiming a page before the tree drops (or
+        # takes ownership of) it is the cancel-during-publish bug class.
+        self.free_guard: Optional[Callable[[int], bool]] = None
+        self.bytes_copied = 0        # splice/store/load traffic (admission cost)
         self._store_fns: dict = {}
         self._state_fns: dict = {}
         self._load_fns: dict = {}
@@ -163,33 +201,62 @@ class PagePool:
     def alloc(self) -> Optional[int]:
         """One free page id, or None when the pool is exhausted (the
         prefix cache then evicts or drops the publish)."""
-        return self._free.pop() if self._free else None
+        if not self._free:
+            return None
+        pid = self._free.pop()
+        self._free_set.discard(pid)
+        return pid
 
     def free(self, pid: int):
+        assert pid != TRASH_PAGE, "page 0 is the reserved trash page"
+        assert pid not in self._free_set, f"double free of page {pid}"
+        assert self.free_guard is None or not self.free_guard(pid), (
+            f"release-ordering violation: freeing page {pid} while the "
+            "prefix tree still references it — ownership transfer/publish "
+            "must complete before a cancelled slot's pages are reclaimed")
+        self._free_set.add(pid)
         self._free.append(pid)
 
-    # ------------------------------------------------------------ movement
-    def _block_spec(self, i: int):
-        """(batch_axis, seq_axis-in-block) for pooled leaf i."""
-        lay = self._layouts[i]
-        sa = lay.seq_axis - (1 if lay.batch_axis < lay.seq_axis else 0)
-        return lay.batch_axis, sa
+    # ------------------------------------------------------------ paged view
+    def paged_cache(self, batch: int, max_pages: int) -> dict:
+        """Zero-copy decode cache over the pool buffers for a ``batch``-
+        slot batcher: the model's cache tree with every "kv_seq" leaf
+        replaced by its pool buffer, plus a per-slot ``block_tables``
+        (batch, max_pages) leaf and a (batch,) ``pos`` vector. Transfers
+        buffer ownership to the caller (the batcher's jitted tick
+        carries them from then on); the copying store/load movement
+        below becomes unavailable. Stateless models only — state leaves
+        have no block-table address."""
+        assert not self.stateful, "paged decode requires a stateless cache"
+        assert not self._detached, "pool buffers already handed out"
+        leaves = [buf if buf is not None else jnp.zeros((), jnp.int32)
+                  for buf in self._paged]
+        cache = self._treedef.unflatten(leaves)
+        cache["pos"] = jnp.zeros((batch,), jnp.int32)
+        cache["block_tables"] = jnp.zeros((batch, max_pages), jnp.int32)
+        self._paged = [None] * len(self._paged)
+        self._detached = True
+        return cache
 
+    # ------------------------------------------------------------ movement
     def store_pages(self, cache: dict, batch_idx: int, first_page: int,
                     pids: list[int]):
         """Copy ``len(pids)`` consecutive pages starting at page
         ``first_page`` (token positions ``[first_page*page, ...)``) of
-        slot ``batch_idx`` from ``cache`` into the (arbitrary) pool
-        pages ``pids`` — paged leaves only, ONE device dispatch for the
-        whole run."""
+        slot ``batch_idx`` from a contiguous ``cache`` into the
+        (arbitrary) pool pages ``pids`` — paged leaves only, ONE device
+        dispatch for the whole run."""
+        assert not self._detached, "pool buffers owned by the paged batcher"
         n = len(pids)
+        self.bytes_copied += n * self._page_bytes
         leaves = jax.tree.leaves(cache)
         key = (n, tuple(l.shape for l in leaves))
         fn = self._store_fns.get(key)
         if fn is None:
-            layouts, page = self._layouts, self.page
-            specs = [self._block_spec(i) if self._paged[i] is not None else None
-                     for i in range(len(layouts))]
+            page = self.page
+            specs = [(l.batch_axis, l.seq_axis)
+                     if self._paged[i] is not None else None
+                     for i, l in enumerate(self._layouts)]
 
             def store(paged, leaves, b, s0, pids):
                 out = []
@@ -197,15 +264,17 @@ class PagePool:
                     if pool is None:
                         out.append(None)
                         continue
-                    ba, sa = spec
+                    ba, sa = spec                    # axes in the full leaf
                     leaf = jax.lax.dynamic_index_in_dim(leaf, b, ba,
                                                         keepdims=False)
                     run = jax.lax.dynamic_slice_in_dim(leaf, s0, n * page,
-                                                       axis=sa)
+                                                       axis=sa - 1)
                     shape = list(run.shape)
-                    shape[sa:sa + 1] = [n, page]
-                    blocks = jnp.moveaxis(run.reshape(shape), sa, 0)
-                    out.append(pool.at[pids].set(blocks.astype(pool.dtype)))
+                    shape[sa - 1:sa] = [n, page]
+                    blocks = jnp.moveaxis(run.reshape(shape), sa - 1, 0)
+                    pool = jnp.moveaxis(pool, ba, 0)
+                    pool = pool.at[pids].set(blocks.astype(pool.dtype))
+                    out.append(jnp.moveaxis(pool, 0, ba))
                 return out
 
             # donate the pool buffers: a publish must update its pages in
@@ -225,6 +294,7 @@ class PagePool:
         that and marks the page ``state_ok``."""
         if not any(s is not None for s in self._state):
             return
+        self.bytes_copied += self._state_bytes
         leaves = jax.tree.leaves(cache)
         key = tuple(l.shape for l in leaves)
         fn = self._state_fns.get(key)
@@ -253,19 +323,24 @@ class PagePool:
     def load(self, cache: dict, batch_idx: int, page_ids: list[int],
              state_pid: Optional[int] = None) -> dict:
         """Splice ``len(page_ids)`` cached pages into slot ``batch_idx``
-        of ``cache`` as its token prefix ``[0, n*page)``, and (for
-        stateful models) restore the state snapshot taken at the end of
-        page ``state_pid``. Returns the updated cache with ``pos`` set
-        to the cached-prefix length."""
+        of a contiguous ``cache`` as its token prefix ``[0, n*page)``,
+        and (for stateful models) restore the state snapshot taken at
+        the end of page ``state_pid``. Returns the updated cache with
+        ``pos`` set to the cached-prefix length."""
+        assert not self._detached, "pool buffers owned by the paged batcher"
         n = len(page_ids)
+        self.bytes_copied += n * self._page_bytes
+        if state_pid is not None:
+            self.bytes_copied += self._state_bytes
         leaves, treedef = jax.tree.flatten(cache)
         key = (n, tuple(l.shape for l in leaves), state_pid is not None)
         fn = self._load_fns.get(key)
         if fn is None:
-            layouts, page = self._layouts, self.page
-            specs = [self._block_spec(i) if self._paged[i] is not None else None
-                     for i in range(len(layouts))]
-            bas = [l.batch_axis for l in layouts]
+            page = self.page
+            specs = [(l.batch_axis, l.seq_axis)
+                     if self._paged[i] is not None else None
+                     for i, l in enumerate(self._layouts)]
+            bas = [l.batch_axis for l in self._layouts]
             with_state = state_pid is not None
 
             def load(paged, state, leaves, b, ids, spid):
@@ -273,15 +348,14 @@ class PagePool:
                 for pool, spool, leaf, spec, ba in zip(paged, state, leaves,
                                                        specs, bas):
                     if spec is not None:
-                        _, sa = spec
-                        blocks = pool[ids]                     # (n, ...)
-                        blocks = jnp.moveaxis(blocks, 0, sa)   # page axis home
+                        ba_, sa = spec
+                        blocks = jnp.take(pool, ids, axis=ba_)  # n at ba_
+                        blocks = jnp.moveaxis(blocks, ba_, sa - 1)
                         shape = list(blocks.shape)
-                        shape[sa:sa + 2] = [n * page]
-                        run = blocks.reshape(shape)            # (..., n*page, ..)
-                        run = jnp.expand_dims(run, ba)
+                        shape[sa - 1:sa + 1] = [n * page]
+                        run = jnp.expand_dims(blocks.reshape(shape), ba_)
                         starts = [0] * leaf.ndim
-                        starts[ba] = b
+                        starts[ba_] = b
                         leaf = jax.lax.dynamic_update_slice(
                             leaf, run.astype(leaf.dtype), tuple(starts))
                     elif spool is not None and with_state:

@@ -99,6 +99,17 @@ class PrefixCache:
         self.roots: dict[str, _Root] = {}
         self.stats = CacheStats()
         self._clock = 0
+        # every pool page the tree currently references, registered as the
+        # pool's release-ordering guard: pool.free() asserts the page is
+        # not in here, so "evict then free" is the only legal order and a
+        # cancelled publish can never reclaim a page it already handed to
+        # the tree
+        self._pids: set[int] = set()
+        pool.free_guard = self.owns
+
+    def owns(self, pid: int) -> bool:
+        """True while a tree node references pool page ``pid``."""
+        return pid in self._pids
 
     # ------------------------------------------------------------ internals
     def _touch(self, node: _Node):
@@ -198,9 +209,56 @@ class PrefixCache:
                     key = tuple(tokens[p * self.page:(p + 1) * self.page])
                     child = _Node(key, pid, node)
                     node.children[key] = child
+                    self._pids.add(pid)
                     self.stats.published_pages += 1
                     self._adopt(lease, child, state_at, cache, batch_idx, p)
                     node = child
+
+    def publish_paged(self, lease: PrefixLease, tokens: list, kv_n: int,
+                      pages: list, owned: list) -> list:
+        """Zero-copy publish for the paged decode path: the slot's KV
+        already lives in pool pages (``pages[p]`` backs token page ``p``
+        of the slot's block table; ``owned[p]`` marks pages the session
+        allocated privately vs. matched tree pages). Extending the tree
+        is pure **ownership transfer** — a private page becomes a tree
+        node holding the same pool page id; no device copy, no store
+        dispatch. A dedupe hit (another session published the identical
+        page first) frees our private duplicate and *repoints* the slot
+        at the tree's page — content is bitwise identical by position
+        stability. Returns ``[(page_index, new_pid), ...]`` repoints for
+        the caller to fold back into its block table. ``owned`` is
+        updated in place: every page the tree absorbed (or repointed)
+        flips to False so the caller won't double-free it."""
+        if lease.released:
+            return []
+        root = self._root(lease.salt)
+        node = lease.tail or root
+        n_pages = min(kv_n, len(tokens)) // self.page
+        repoints = []
+        for p in range(len(lease.chain), n_pages):
+            key = tuple(tokens[p * self.page:(p + 1) * self.page])
+            child = node.children.get(key)
+            if child is not None:
+                self.stats.deduped_pages += 1
+                if owned[p]:
+                    assert pages[p] != child.page
+                    self.pool.free(pages[p])
+                    owned[p] = False
+                    pages[p] = child.page
+                    repoints.append((p, child.page))
+            else:
+                assert owned[p], (
+                    "publishing a page the session neither owns nor matched")
+                child = _Node(key, pages[p], node)
+                node.children[key] = child
+                self._pids.add(pages[p])
+                owned[p] = False           # the tree owns it now
+                self.stats.published_pages += 1
+            child.pins += 1
+            self._touch(child)
+            lease.chain.append(child)
+            node = child
+        return repoints
 
     def _adopt(self, lease: PrefixLease, child: _Node, state_at: int,
                cache: dict, batch_idx: int, p: int):
@@ -263,6 +321,7 @@ class PrefixCache:
         leaves.sort(key=lambda n: n.last_used)
         for victim in leaves[:k]:
             del victim.parent.children[victim.key]
+            self._pids.discard(victim.page)   # before free(): guard ordering
             self.pool.free(victim.page)
             self.stats.evicted_pages += 1
         return bool(leaves)

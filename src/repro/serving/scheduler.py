@@ -106,6 +106,12 @@ class Request:
     _stop: Optional[StopMatcher] = None
     _lease: Optional[PrefixLease] = None   # pinned prefix-tree chain
     _kv_ids: Optional[list] = None         # clipped prompt (KV token basis)
+    # paged decode mode: the slot's block-table mapping. _pages[p] is the
+    # pool page backing token page p; _own[p] marks pages this session
+    # allocated privately (freed or published at finish) vs matched tree
+    # pages (pinned via the lease, never freed by the session)
+    _pages: list = field(default_factory=list)
+    _own: list = field(default_factory=list)
 
     def _matcher(self) -> Optional[StopMatcher]:
         if self._stop is None and self.params and self.params.stop:
@@ -178,8 +184,6 @@ class ContinuousBatcher:
         self.prefill_chunk = prefill_chunk
         self.page = page
 
-        self.cache = self.model.init_cache(self.B, self.max_seq)
-        self.cache["pos"] = jnp.zeros((self.B,), jnp.int32)
         self._layout = cache_layout(self.model.cache_specs())
         self._splicer = SlotSplicer(self._layout)
         # shared paged-KV pool + radix-tree prefix cache. The pool — not
@@ -190,6 +194,31 @@ class ContinuousBatcher:
         self.pool = (PagePool(self.model, page=page, capacity=prefix_pages)
                      if prefix_pages else None)
         self.prefix = PrefixCache(self.pool) if self.pool is not None else None
+        # Native paged decode: attention-only models serve every slot
+        # straight out of the pool buffers through per-slot block tables
+        # — admission of a cached prefix is a pointer write, publish is
+        # an ownership transfer, and the splice copy disappears. Needs
+        # max_seq page-aligned (gathered view == contiguous view, the
+        # token-identity invariant) and the pool big enough for one
+        # worst-case slot. Stateful families (SSM/xLSTM/cross-KV) keep
+        # the contiguous splice path: their state has no page address.
+        self.n_pages = self.max_seq // page
+        self.paged = (self.pool is not None
+                      and not self.pool.stateful
+                      and self.max_seq % page == 0
+                      and prefix_pages >= self.n_pages
+                      and getattr(engine, "paged_kv", True))
+        self.admissions = 0
+        self._stall = False
+        if self.paged:
+            self.cache = self.pool.paged_cache(self.B, self.n_pages)
+            self._bt = np.zeros((self.B, self.n_pages), np.int32)
+            self._bt_dirty = False
+            self._pool_keys = [k for k in self.cache
+                               if k not in ("pos", "block_tables")]
+        else:
+            self.cache = self.model.init_cache(self.B, self.max_seq)
+            self.cache["pos"] = jnp.zeros((self.B,), jnp.int32)
         self.active: list[Optional[Request]] = [None] * self.B
         self.queue: list[Request] = []
         self._adm: Optional[_Admission] = None
@@ -285,13 +314,26 @@ class ContinuousBatcher:
             self.queue.remove(req)
         elif self._adm is not None and self._adm.req is req:
             adm = self._adm
-            if adm.lease is not None and not self.pool.stateful:
+            if self.paged and adm.lease is not None:
+                # ORDER MATTERS: transfer the completed pages to the tree
+                # FIRST, then free what the session still owns. The
+                # transfer flips their _own flags, so the sweep below
+                # cannot reclaim a page the tree now references — and
+                # pool.free() asserts exactly that invariant.
+                self.prefix.publish_paged(adm.lease, adm.ids, adm.pos,
+                                          req._pages, req._own)
+            elif adm.lease is not None and not self.pool.stateful:
                 # stateless models defer publishing to admission end —
                 # a cancelled prefill still publishes the pages it
                 # completed before dying (tree, not trash)
                 self.prefix.publish(adm.lease, adm.ids, adm.cache, 0,
                                     kv_n=adm.pos, state_at=-1)
             self._release_lease(req)
+            if self.paged:
+                for pid, own in zip(req._pages, req._own):
+                    if own:
+                        self.pool.free(pid)
+                req._pages, req._own = [], []
             self._adm = None
         else:
             for slot, r in enumerate(self.active):
@@ -342,19 +384,53 @@ class ContinuousBatcher:
             ids, req.max_new_tokens = clip_prompt(
                 req.prompt_ids, req.max_new_tokens, self.max_seq)
             req._kv_ids = ids
-            one = self.model.init_cache(1, self.max_seq)
             lease = None
             n_cached = 0
-            if self.prefix is not None:
-                # longest cached page-aligned prefix under this tenant's
-                # salt: splice its pool pages in and prefill only the
-                # suffix. The lease pins every matched page until the
-                # session finishes — eviction can never free a page a
-                # live slot still maps.
+            if self.paged:
+                # zero-copy admission: the prompt's cached prefix is
+                # served by POINTING the slot's block table at the tree's
+                # pages (no gather, no splice); the uncached suffix plus
+                # the decode budget get private pages allocated UPFRONT,
+                # so nothing inside the serving loop can run out of
+                # memory mid-stream. The max written position is
+                # len(ids) + max_new - 2 (the last sampled token is
+                # never fed back), hence the page count below.
                 lease = self.prefix.begin(req.cache_salt, ids)
-                if lease.n_cached:
-                    one = self.prefix.load_into(lease, one, 0)
-                    n_cached = lease.n_cached
+                need = -(-(len(ids) + req.max_new_tokens - 1) // self.page)
+                private = need - len(lease.chain)
+                pids = self.prefix._alloc_many(private)
+                if len(pids) < private:
+                    # pool exhausted even after eviction (live slots pin
+                    # their pages): put everything back and retry once a
+                    # slot finishes — never admit a slot that could die
+                    # of allocation failure mid-decode
+                    for pid in pids:
+                        self.pool.free(pid)
+                    self.prefix.release(lease)
+                    req._lease = None
+                    self.queue.insert(0, req)
+                    self._stall = True
+                    return
+                req._pages = [nd.page for nd in lease.chain] + pids
+                req._own = [False] * len(lease.chain) + [True] * len(pids)
+                n_cached = lease.n_cached
+                row = np.zeros((1, self.n_pages), np.int32)
+                row[0, :len(req._pages)] = req._pages
+                one = {k: self.cache[k] for k in self._pool_keys}
+                one["pos"] = jnp.asarray(n_cached, jnp.int32)
+                one["block_tables"] = jnp.asarray(row)
+            else:
+                one = self.model.init_cache(1, self.max_seq)
+                if self.prefix is not None:
+                    # longest cached page-aligned prefix under this
+                    # tenant's salt: splice its pool pages in and prefill
+                    # only the suffix. The lease pins every matched page
+                    # until the session finishes — eviction can never
+                    # free a page a live slot still maps.
+                    lease = self.prefix.begin(req.cache_salt, ids)
+                    if lease.n_cached:
+                        one = self.prefix.load_into(lease, one, 0)
+                        n_cached = lease.n_cached
             req._lease = lease
             req.prefix_hit_tokens = n_cached
             p, sc = req.params, self.engine.sampler
@@ -377,8 +453,21 @@ class ContinuousBatcher:
         while adm.pieces and budget > 0:
             n = adm.pieces.pop(0)
             chunk = jnp.asarray([adm.ids[adm.pos:adm.pos + n]], jnp.int32)
+            if self.paged:
+                # the admission writes into the SAME pool buffers the
+                # fused tick decodes from; interleaved ticks replace
+                # them, so resync before and after every chunk. The
+                # admission's block-table row is its own — it is not
+                # installed into the decode tables until activation, so
+                # parked slots' trash-page writes can never land on a
+                # page this prefill (or the prefix tree) owns.
+                for kk in self._pool_keys:
+                    adm.cache[kk] = self.cache[kk]
             logits, adm.cache = self._prefill(self.engine.params, chunk,
                                               adm.cache)
+            if self.paged:
+                for kk in self._pool_keys:
+                    self.cache[kk] = adm.cache[kk]
             adm.pos += n
             budget -= n
             if adm.lease is not None and self.pool.stateful:
@@ -411,7 +500,15 @@ class ContinuousBatcher:
         # splice below, or the consumer's TTFT silently re-absorbs the
         # splice + first fused tick this emission was moved ahead of
         time.sleep(0)
-        if adm.lease is not None and not self.pool.stateful:
+        self.admissions += 1
+        if self.paged and adm.lease is not None:
+            # paged publish is pure ownership transfer — the prompt's
+            # full pages BECOME tree nodes (zero bytes moved); a dedupe
+            # hit frees our duplicate and repoints the mapping at the
+            # tree's bitwise-identical page (folded into req._pages)
+            self.prefix.publish_paged(adm.lease, adm.ids, adm.pos,
+                                      req._pages, req._own)
+        elif adm.lease is not None and not self.pool.stateful:
             # attention-only models: publish the whole prompt's pages in
             # one batched device store, AFTER the first token left — the
             # publish never taxes TTFT (a same-prefix session can only
@@ -424,12 +521,26 @@ class ContinuousBatcher:
                                               first != self.tokenizer.eos_id)
                                  else "stop")
             self._release_lease(req)
+            if self.paged:
+                for pid, own in zip(req._pages, req._own):
+                    if own:
+                        self.pool.free(pid)
+                req._pages, req._own = [], []
             req.flush_stop()
             if req.on_done:
                 req.on_done(req)
             return
-        used = min(round_up(len(adm.ids), self.page), self.max_seq)
-        self.cache = self._splicer(self.cache, adm.cache, slot, used)
+        if self.paged:
+            # activation is two pointer writes: install the block-table
+            # row into the decode tables and set the slot's position —
+            # the contiguous path's per-admission splice copy is gone
+            self._bt[slot, :] = 0
+            self._bt[slot, :len(req._pages)] = req._pages
+            self._bt_dirty = True
+            self.cache["pos"] = self.cache["pos"].at[slot].set(len(adm.ids))
+        else:
+            used = min(round_up(len(adm.ids), self.page), self.max_seq)
+            self.cache = self._splicer(self.cache, adm.cache, slot, used)
         self.active[slot] = req
         self._active_m[slot] = True
         self._gen[slot] = 1          # the prefill token counts
@@ -458,12 +569,29 @@ class ContinuousBatcher:
         # (state_at=-1): those nodes become resumable once a later
         # prefill re-crosses them at an aligned boundary and upgrades
         # them in place.
-        if req._lease is not None and self.prefix is not None and \
-                req._kv_ids is not None:
-            kv_n = len(req._kv_ids) + max(len(req.output_ids) - 1, 0)
-            self.prefix.publish(req._lease, req._kv_ids + req.output_ids,
-                                self.cache, slot, kv_n=kv_n, state_at=-1)
-        self._release_lease(req)
+        if self.paged:
+            if req._lease is not None and req._kv_ids is not None:
+                kv_n = len(req._kv_ids) + max(len(req.output_ids) - 1, 0)
+                # ownership transfer again: the decoded extension's pages
+                # join the tree in place. MUST precede the owned-page
+                # sweep below (pool.free asserts the ordering).
+                self.prefix.publish_paged(req._lease,
+                                          req._kv_ids + req.output_ids,
+                                          kv_n, req._pages, req._own)
+            self._release_lease(req)
+            for pid, own in zip(req._pages, req._own):
+                if own:
+                    self.pool.free(pid)
+            req._pages, req._own = [], []
+            self._bt[slot, :] = 0     # next mapping installs fresh
+            self._bt_dirty = True
+        else:
+            if req._lease is not None and self.prefix is not None and \
+                    req._kv_ids is not None:
+                kv_n = len(req._kv_ids) + max(len(req.output_ids) - 1, 0)
+                self.prefix.publish(req._lease, req._kv_ids + req.output_ids,
+                                    self.cache, slot, kv_n=kv_n, state_at=-1)
+            self._release_lease(req)
         req.flush_stop(deliver=not cancelled)
         if req.on_done:
             req.on_done(req)
@@ -475,11 +603,23 @@ class ContinuousBatcher:
         return (sum(r is not None for r in self.active)
                 + (self._adm is not None))
 
+    def bytes_copied_per_admission(self) -> float:
+        """Device bytes moved per admitted session by splice/store/load
+        KV plumbing (attention math itself excluded). The headline
+        number for the paged decode path: contiguous serving pays a
+        whole-prompt splice (plus pool stores) per admission; paged
+        serving re-points block tables, so this is ~0."""
+        total = self._splicer.bytes_copied
+        if self.pool is not None:
+            total += self.pool.bytes_copied
+        return total / max(self.admissions, 1)
+
     def step(self) -> int:
         """One scheduler tick: admit (one chunk), fused decode, emit, reap,
         re-admit. Returns the number of requests still in flight (active
         slots plus a mid-prefill admission), so callers may loop on it."""
         self._freed = False
+        self._stall = False
         idle = not any(r is not None for r in self.active)
         self._advance_admissions()
         if idle:
@@ -489,10 +629,14 @@ class ContinuousBatcher:
             # simultaneous arrivals don't serialize their admissions
             # across N*chunks ticks before the batch even starts.
             while (self._adm is not None
-                   or (self.queue and any(r is None for r in self.active))):
+                   or (self.queue and not self._stall
+                       and any(r is None for r in self.active))):
                 self._advance_admissions()
         if not any(r is not None for r in self.active):
             return self._in_flight()
+        if self.paged and self._bt_dirty:
+            self.cache["block_tables"] = jnp.asarray(self._bt)
+            self._bt_dirty = False
         self.engine.rng, k = jax.random.split(self.engine.rng)
         self.tok, self.cache, packed = self._fused(
             self.engine.params, self.tok, self.cache,

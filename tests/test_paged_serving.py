@@ -1,0 +1,267 @@
+"""Native paged decode: block-table serving edge cases and the
+release-ordering contract between the pool and the prefix tree.
+
+The batcher runs in paged mode for attention-only models (max_seq
+page-aligned, pool >= one worst-case slot): slots decode straight out
+of pool buffers through per-slot block tables, admission points at tree
+pages instead of splicing, publish transfers page ownership, and the
+per-admission device copy drops to zero. Everything here checks the
+edges of that mapping — partial pages, full tables, shared-then-
+divergent tables, pinned leaves under eviction pressure — plus the
+satellite regression: cancel mid-publish must never leave the tree
+holding a block-table reference to a reclaimed page.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving import (ContinuousBatcher, PagePool, PrefixCache, Request,
+                           ServingEngine)
+
+PROMPT = "hello paged world, this is a longer shared prompt for caching!"
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96)
+    e.warmup()
+    yield e
+    e.shutdown()
+
+
+def run_one(cb, engine, prompt, max_new=6, params=None):
+    out = {}
+    cb.submit(Request(rid="r", prompt_ids=engine.tokenizer.encode(prompt),
+                      max_new_tokens=max_new, params=params,
+                      on_done=lambda r: out.update(tokens=r.output_ids,
+                                                   hit=r.prefix_hit_tokens,
+                                                   reason=r.finish_reason)))
+    cb.run_until_drained()
+    return out
+
+
+# ------------------------------------------------------------ mode gating
+def test_paged_mode_active_for_attention_models(engine):
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    assert cb.paged
+    assert "block_tables" in cb.cache and cb.n_pages == 6
+
+
+def test_paged_mode_requires_aligned_max_seq(engine):
+    # 90 % 16 != 0: the gathered view could not equal the contiguous
+    # view, so the batcher must fall back to the splice path
+    cb = ContinuousBatcher(engine, slots=2, max_seq=90, prefix_pages=64)
+    assert not cb.paged
+    assert run_one(cb, engine, PROMPT, max_new=4)["tokens"]
+
+
+def test_stateful_families_stay_contiguous():
+    cfg = get_smoke_config("zamba2-7b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96)
+    cb = ContinuousBatcher(e, slots=2, max_seq=96, prefix_pages=64)
+    assert not cb.paged              # SSM state has no page address
+    e.shutdown()
+
+
+def test_paged_kv_flag_pins_contiguous_path():
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96, paged_kv=False)
+    cb = ContinuousBatcher(e, slots=2, max_seq=96, prefix_pages=64)
+    assert not cb.paged
+    e.shutdown()
+
+
+# ------------------------------------------------------- block-table edges
+def test_single_partially_filled_page(engine):
+    """Prompt + budget fit inside ONE page: the block table maps a single
+    page, decode masks everything beyond kv_len."""
+    solo = engine.generate("hi", max_new_tokens=4)
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    out = run_one(cb, engine, "hi", max_new=4)
+    assert out["tokens"] == solo.tokens
+    cold = cb.pool.bytes_copied + cb._splicer.bytes_copied
+    assert cold == 0                 # no splice, no store: pure pointers
+
+
+def test_slot_spans_entire_block_table(engine):
+    """len(prompt) + max_new - 1 == max_seq: every page of the table is
+    mapped and the last written position is the last slot of the last
+    page. Must finish by length without tripping the trash-page or
+    free-list guards."""
+    ids = list(range(2, 2 + 64))     # 64 prompt tokens (4 full pages)
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    out = {}
+    req = Request(rid="full", prompt_ids=ids, max_new_tokens=33,
+                  on_done=lambda r: out.update(tokens=r.output_ids,
+                                               reason=r.finish_reason))
+    cb.submit(req)
+    cb.step()
+    assert len(req._pages) == cb.n_pages       # table fully mapped
+    cb.run_until_drained()
+    assert out["reason"] in ("length", "stop")
+    if out["reason"] == "length":
+        assert len(out["tokens"]) == 33
+
+
+def test_shared_prefix_diverging_last_page(engine):
+    """Two concurrent slots whose block tables share every prefix page
+    and diverge only in the final page: ref-counted pages are mapped by
+    both tables at once, yet each slot decodes exactly its solo tokens
+    (shared pages are read-only by construction — each slot's writes go
+    to its own private tail page)."""
+    base = PROMPT + " shared tail padding so the prefix covers pages"
+    a_prompt, b_prompt = base + " AAAA", base + " BBBB"
+    solo_a = engine.generate(a_prompt, max_new_tokens=5).tokens
+    solo_b = engine.generate(b_prompt, max_new_tokens=5).tokens
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    run_one(cb, engine, base, max_new=2)       # seed the shared pages
+    out = {}
+    for rid, prompt in (("a", a_prompt), ("b", b_prompt)):
+        cb.submit(Request(rid=rid, prompt_ids=engine.tokenizer.encode(prompt),
+                          max_new_tokens=5,
+                          on_done=lambda r, rid=rid: out.update(
+                              {rid: (r.output_ids, r.prefix_hit_tokens)})))
+    # step until both are active, then check their tables overlap
+    for _ in range(200):
+        cb.step()
+        if all(r is not None for r in cb.active):
+            break
+    if all(r is not None for r in cb.active):
+        t0, t1 = cb._bt[0], cb._bt[1]
+        shared = set(t0[t0 != 0]) & set(t1[t1 != 0])
+        assert shared                # prefix pages mapped by BOTH tables
+        assert not np.array_equal(t0, t1)      # ...diverging at the tail
+    cb.run_until_drained()
+    assert out["a"][0] == solo_a and out["b"][0] == solo_b
+    assert out["a"][1] > 0 and out["b"][1] > 0
+
+
+def test_eviction_refused_while_block_table_pins_leaf(engine):
+    """A live slot's block table maps tree pages through its lease pins:
+    allocation pressure from other admissions must evict around the
+    pinned chain (or stall the admission) — a mapped page id must never
+    reach the free list while the slot decodes from it."""
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=6)
+    assert cb.paged
+    run_one(cb, engine, PROMPT, max_new=2)     # seed the tree
+    live = Request(rid="live", prompt_ids=engine.tokenizer.encode(PROMPT),
+                   max_new_tokens=10)
+    cb.submit(live)
+    cb.step()
+    assert live._lease is not None and live._lease.chain
+    mapped = set(cb._bt[0][cb._bt[0] != 0]) | set(live._pages)
+    for i in range(4):
+        cb.submit(Request(
+            rid=f"churn{i}",
+            prompt_ids=engine.tokenizer.encode(
+                f"unrelated churn prompt number {i} padding text"),
+            max_new_tokens=2))
+    while not live.done:
+        cb.step()
+        if not live.done:
+            assert not (mapped & set(cb.pool._free))
+    cb.run_until_drained()
+
+
+# ------------------------------------------------ release-ordering guard
+def test_cancel_during_publish_keeps_tree_pages(engine):
+    """THE satellite regression: cancel mid-chunked-prefill transfers
+    the completed pages to the tree FIRST, then frees only what the
+    session still owns. Afterwards no tree-referenced page may sit on
+    the free list, and a warm admission must decode from the surviving
+    pages without faulting."""
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefill_chunk=16,
+                           prefix_pages=64)
+    bg = Request(rid="bg", prompt_ids=engine.tokenizer.encode("background"),
+                 max_new_tokens=40)
+    cb.submit(bg)
+    cb.step()                        # keep a decode live: pacing applies
+    victim = Request(rid="victim", prompt_ids=engine.tokenizer.encode(PROMPT),
+                     max_new_tokens=8)
+    cb.submit(victim)
+    cb.step()                        # one chunk -> mid-admission
+    assert cb._adm is not None and cb._adm.req is victim
+    done_pages = cb._adm.pos // cb.page
+    assert done_pages >= 1
+    assert cb.cancel(victim)
+    # ownership transferred, private tail freed, nothing double-owned
+    assert victim._pages == [] and victim._own == []
+    tree_pids = set(cb.prefix._pids)
+    assert not (tree_pids & set(cb.pool._free))
+    assert cb.prefix.stats.published_pages >= done_pages
+    cb.run_until_drained()
+    warm = run_one(cb, engine, PROMPT, max_new=4)
+    assert warm["hit"] >= done_pages * cb.page
+
+
+def test_pool_free_asserts_release_ordering(engine):
+    """pool.free() on a page the tree still references must trip the
+    guard — the bug class this orders out is a cancelled session
+    reclaiming a page it already published, leaving the tree pointing
+    at memory the next admission overwrites."""
+    pool = PagePool(engine.model, page=16, capacity=4)
+    pc = PrefixCache(pool)
+    cache = engine.model.init_cache(1, 96)
+    ids = list(range(2, 2 + 32))
+    lease = pc.begin("s", ids + [9])
+    pc.publish(lease, ids, cache, 0, kv_n=32, state_at=-1)
+    owned_pid = lease.chain[0].page
+    with pytest.raises(AssertionError):
+        pool.free(owned_pid)         # tree still references it
+    # legal order: evict (tree drops the reference) -> the free inside
+    # eviction succeeds; freeing it AGAIN is a double free
+    pc.release(lease)
+    assert pc.evict_one() and pc.evict_one()
+    freed = lease.chain[1].page
+    with pytest.raises(AssertionError):
+        pool.free(freed)
+    with pytest.raises(AssertionError):
+        pool.free(0)                 # the trash page is never freeable
+
+
+# ------------------------------------------------- paged vs contiguous
+@pytest.mark.parametrize("arch", ["minitron-8b", "deepseek-v2-lite-16b"])
+def test_paged_token_identical_to_contiguous(arch):
+    """THE acceptance criterion: for every attention-bearing family
+    (dense GQA and MLA), paged decode produces bit-for-bit the tokens
+    of the contiguous splice path — greedy AND seeded."""
+    from repro.serving import GenerationParams
+
+    cfg = get_smoke_config(arch).replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96)
+    seeded = GenerationParams(max_tokens=6, temperature=0.9, seed=77)
+    try:
+        outs = {}
+        for mode, paged in (("paged", True), ("contiguous", False)):
+            e.paged_kv = paged
+            cb = ContinuousBatcher(e, slots=2, max_seq=96, prefix_pages=64)
+            assert cb.paged is paged, (arch, mode)
+            outs[mode] = {
+                "greedy": run_one(cb, e, PROMPT, max_new=6)["tokens"],
+                "seeded": run_one(cb, e, PROMPT + " x", max_new=6,
+                                  params=seeded)["tokens"],
+            }
+        assert outs["paged"]["greedy"] == outs["contiguous"]["greedy"], arch
+        assert outs["paged"]["seeded"] == outs["contiguous"]["seeded"], arch
+    finally:
+        e.shutdown()
+
+
+# ------------------------------------------------------- zero-copy metric
+def test_bytes_copied_per_admission_is_zero_paged(engine):
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    for prompt in (PROMPT, PROMPT, PROMPT + " more"):
+        run_one(cb, engine, prompt, max_new=4)
+    assert cb.admissions == 3
+    assert cb.bytes_copied_per_admission() == 0.0
+
+
+def test_bytes_copied_per_admission_positive_contiguous():
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300, vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96, paged_kv=False)
+    cb = ContinuousBatcher(e, slots=2, max_seq=96, prefix_pages=64)
+    run_one(cb, e, PROMPT, max_new=4)
+    assert cb.bytes_copied_per_admission() > 0
+    e.shutdown()

@@ -186,8 +186,10 @@ def test_cancel_mid_prefill_releases_pages(engine):
 
 def test_eviction_never_frees_live_pinned_pages(engine):
     """Fill a tiny pool under a live session: eviction reclaims only
-    unpinned LRU pages; the live session's pinned chain survives and its
-    finish-publish extends it without error."""
+    unpinned LRU pages — the live session's pinned pages must never
+    reach the free list WHILE the lease is held (after it finishes and
+    releases, they are fair game like any other tree page) — and its
+    finish-publish extends the chain without error."""
     cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=6)
     solo = engine.generate(PROMPT, max_new_tokens=10).tokens
     # seed the tree, then hold a live session pinning the prefix
@@ -201,14 +203,21 @@ def test_eviction_never_frees_live_pinned_pages(engine):
     cb.step()
     assert live._lease is not None and live._lease.chain
     pinned_pages = {n.page for n in live._lease.chain}
-    # churn unrelated prompts to exhaust the 6-page pool repeatedly
+    # churn unrelated prompts to exhaust the 6-page pool while live is
+    # still decoding: eviction (or paged-mode allocation stalls) must
+    # route around the pinned chain, never through it
     for i in range(4):
-        run_one(cb, engine, f"unrelated churn prompt number {i} padding text",
-                max_new=2)
-    assert cb.prefix.stats.evicted_pages > 0        # pressure was real
-    # the live session's pages were never returned to the free list
-    assert not (pinned_pages & set(cb.pool._free))
+        cb.submit(Request(
+            rid=f"churn{i}",
+            prompt_ids=engine.tokenizer.encode(
+                f"unrelated churn prompt number {i} padding text"),
+            max_new_tokens=2))
+    while not live.done:
+        cb.step()
+        if not live.done:
+            assert not (pinned_pages & set(cb.pool._free))
     cb.run_until_drained()
+    assert cb.prefix.stats.evicted_pages > 0        # pressure was real
     assert out["hit"] > 0 and out["tokens"] == solo
 
 
