@@ -37,6 +37,8 @@ DIRECTIONS = {
     "warm_over_cold_ttft": "lower",
     "gateway_ttft_ratio": "lower",
     "bytes_copied_per_admission": "lower",
+    "spec_decode_speedup": "higher",
+    "spec_acceptance_rate": "higher",
 }
 
 EPS = 1e-9

@@ -1,7 +1,7 @@
 """Benchmark harness — one function per paper table + the roofline
 report. Prints a final ``name,value,derived`` CSV summary.
 
-``--ci`` runs the regression subset instead: five serving-path metrics
+``--ci`` runs the regression subset instead: seven serving-path metrics
 written to ``BENCH_ci.json`` for ``benchmarks/compare.py`` to gate
 against ``benchmarks/baselines.json`` (>15% regression on any metric
 fails the build). The subset is sized for a CPU CI runner, so absolute
@@ -30,7 +30,11 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
       TTFT for the local tier;
     * ``bytes_copied_per_admission`` — device bytes moved by KV
       splice/store plumbing per admitted session; the paged decode
-      path's headline number, exactly 0 by construction.
+      path's headline number, exactly 0 by construction;
+    * ``spec_decode_speedup`` / ``spec_acceptance_rate`` — fused
+      speculative verify vs plain decode tok/s at a controlled 80%
+      draft-agreement rate, plus the acceptance rate itself
+      (benchmarks/speculative.py; identity is asserted in-run).
     """
     t0 = time.perf_counter()
 
@@ -50,6 +54,9 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
     from benchmarks import gateway
     r_gw = gateway.run(tokens=8, repeats=5, n_routed=9, quiet=True)
 
+    from benchmarks import speculative
+    r_sp = speculative.run(tokens=96, repeats=3, quiet=True)
+
     metrics = {
         "bg_decode_retention": r_int["retention"],
         "agg_speedup_16_sessions": r_cc["summary"]["speedup_at_max"],
@@ -57,6 +64,8 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
         "gateway_ttft_ratio": r_gw["overhead_ratio"],
         "bytes_copied_per_admission":
             r_bc["paged"]["bytes_per_admission"],
+        "spec_decode_speedup": r_sp["speedup"],
+        "spec_acceptance_rate": r_sp["acceptance_rate"],
     }
     out = {
         "metrics": metrics,
@@ -66,6 +75,9 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
             "bytes_copied_per_admission_contiguous":
                 r_bc["contiguous"]["bytes_per_admission"],
             "prefix_hit_tokens": r_mt["hit_tokens_total"],
+            "spec_plain_tok_s": r_sp["plain_tok_s"],
+            "spec_tok_s": r_sp["spec_tok_s"],
+            "spec_tokens_per_tick": r_sp["tokens_per_tick"],
         },
         "wall_s": round(time.perf_counter() - t0, 1),
     }
@@ -157,6 +169,14 @@ def main() -> None:
     for alias, r in r_gw["per_alias"].items():
         csv_rows.append((f"gateway.{alias}.ttft_s",
                          f"{r['ttft_p50']:.3f}", f"max={r['ttft_max']:.3f}s"))
+
+    from benchmarks import speculative
+    r_sp = speculative.run(tokens=48 if small else 96,
+                           repeats=2 if small else 3, quiet=True)
+    csv_rows.append(("speculative.decode_speedup",
+                     f"{r_sp['speedup']:.2f}x",
+                     f"acceptance={r_sp['acceptance_rate']*100:.0f}% "
+                     f"k={r_sp['spec_k']} (target >= 2x)"))
 
     from benchmarks import roofline
     r4 = roofline.run()

@@ -1,0 +1,125 @@
+"""Speculative decoding speedup: decode tok/s with the fused
+propose/verify tick vs plain single-token decode, at a controlled
+draft-agreement rate.
+
+The drafter here is a *replay oracle*: it proposes the plain run's own
+continuation with each position independently corrupted with
+probability ``1 - agree`` (fixed RNG — deterministic acceptance
+pattern). That isolates exactly what the paper's cross-tier pairing
+buys — the verifier scores k+1 positions in one fused step instead of
+k+1 serial ticks, and the drafting cost itself is off the measured
+path, as it is when a cheap local-tier model drafts for the hpc-tier
+verifier. Token identity is asserted on every run (the benchmark
+doubles as a correctness check); the emitted stream never depends on
+the agreement rate, only the speed does.
+
+CI gates two numbers from this module (see benchmarks/compare.py):
+``spec_decode_speedup`` (spec tok/s over plain tok/s, higher) and
+``spec_acceptance_rate`` (accepted drafts over proposed, higher — a
+drop means the acceptance rule or the replay plumbing broke, which
+would silently erase the speedup long before it breaks identity).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.serving import ContinuousBatcher, Request, ServingEngine
+
+PROMPT = "speculative decoding benchmark prompt with some shared text"
+
+
+def _decode_tok_s(cb, engine, tokens: int) -> tuple[float, list]:
+    """One request; decode rate measured first-token -> last-token so
+    prefill stays out of the denominator."""
+    stamps = []
+    req = Request(rid="b", prompt_ids=engine.tokenizer.encode(PROMPT),
+                  max_new_tokens=tokens,
+                  on_token=lambda t, s: stamps.append(time.perf_counter()))
+    cb.submit(req)
+    cb.run_until_drained()
+    assert req.done and len(req.output_ids) == tokens
+    return (tokens - 1) / (stamps[-1] - stamps[0]), req.output_ids
+
+
+def _oracle_hook(ref, k: int, agree: float, seed: int = 0):
+    """Replay drafter: the plain run's continuation, each position
+    flipped with probability 1-agree (deterministic given seed)."""
+    rs = np.random.RandomState(seed)
+    flips = rs.random_sample((len(ref), k)) >= agree
+
+    def hook(slot, req):
+        pos = len(req.output_ids)
+        d = list(ref[pos:pos + k])
+        return [(t + 1) % 384 if flips[pos, i] else t
+                for i, t in enumerate(d)]
+    return hook
+
+
+def run(tokens: int = 96, agree: float = 0.8, spec_k: int = 4,
+        repeats: int = 3, quiet: bool = False) -> dict:
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=384)
+    engine = ServingEngine(cfg, max_seq=256, spec_k=spec_k)
+    engine.warmup()
+
+    plain_cb = ContinuousBatcher(engine, slots=1, max_seq=256)
+    _decode_tok_s(plain_cb, engine, tokens)          # jit warmup
+    plain_rates = []
+    ref = None
+    for _ in range(repeats):
+        r, ref = _decode_tok_s(plain_cb, engine, tokens)
+        plain_rates.append(r)
+
+    engine.speculative = "ngram"                     # hook overrides it
+    spec_cb = ContinuousBatcher(engine, slots=1, max_seq=256)
+    engine.speculative = "off"
+    assert spec_cb.spec
+    spec_cb.draft_hook = _oracle_hook(ref, spec_cb.spec_k, agree)
+    _decode_tok_s(spec_cb, engine, tokens)           # jit warmup
+    spec_rates = []
+    for _ in range(repeats):
+        spec_cb.spec_stats.__init__()
+        r, out = _decode_tok_s(spec_cb, engine, tokens)
+        assert out == ref, "speculative output diverged from plain decode"
+        spec_rates.append(r)
+    st = spec_cb.spec_stats
+
+    plain_tok_s = statistics.median(plain_rates)
+    spec_tok_s = statistics.median(spec_rates)
+    out = {
+        "plain_tok_s": plain_tok_s,
+        "spec_tok_s": spec_tok_s,
+        "speedup": spec_tok_s / plain_tok_s,
+        "acceptance_rate": st.acceptance_rate,
+        "tokens_per_tick": st.tokens_per_tick,
+        "agree": agree,
+        "spec_k": spec_cb.spec_k,
+    }
+    if not quiet:
+        print(f"\n=== speculative decode ({tokens} tokens, k={out['spec_k']}, "
+              f"agreement {agree:.0%}) ===")
+        print(f"plain decode: {plain_tok_s:8.1f} tok/s")
+        print(f"speculative : {spec_tok_s:8.1f} tok/s  "
+              f"({out['speedup']:.2f}x, acceptance "
+              f"{out['acceptance_rate']:.0%}, "
+              f"{out['tokens_per_tick']:.2f} tok/tick)")
+    engine.shutdown()
+    return out
+
+
+def main() -> None:
+    import sys
+    smoke = "--smoke" in sys.argv
+    r = run(tokens=48 if smoke else 96, repeats=2 if smoke else 3)
+    if smoke:
+        assert r["speedup"] > 1.0, r
+        assert r["acceptance_rate"] > 0.5, r
+        print("smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -58,7 +58,9 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                  rate_limit: int = 1000, scheduler_slots: int = 8,
                  hpc_workers: int = 8, hpc_overrides: dict | None = None,
                  local_overrides: dict | None = None,
-                 prefix_cache_pages: int = 256) -> StreamSystem:
+                 prefix_cache_pages: int = 256,
+                 speculative: bool = False,
+                 spec_k: int = 4) -> StreamSystem:
     """Everything wired, smoke-scale models (CPU-friendly).
 
     ``scheduler_slots`` sizes each tier engine's session broker (the
@@ -66,7 +68,15 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
     interleave in); ``hpc_workers`` sizes the control-plane worker pool
     so that many dual-channel tasks can be in flight at once — the
     workers only shepherd relay traffic, the decode work itself is
-    batched on the HPC engine's broker thread."""
+    batched on the HPC engine's broker thread.
+
+    ``speculative=True`` (opt-in; default off so baseline numbers are
+    untouched) turns on speculative decoding per tier: the local tier
+    self-drafts with prompt-lookup n-grams, and the hpc tier verifies
+    drafts from the LOCAL tier's model — the paper's cross-tier pairing
+    — when that model implements ``propose_k`` (recurrent local archs
+    fall back to n-gram drafting on the hpc tier too). Output tokens
+    are identical either way; only decode speed changes."""
     rng = jax.random.PRNGKey(0)
 
     # --- engines (the per-tier model servers) ---
@@ -79,12 +89,24 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
         hpc_cfg = hpc_cfg.replace(**hpc_overrides)
     if local_overrides:
         local_cfg = local_cfg.replace(**local_overrides)
+    spec_local, spec_hpc = {}, {}
+    if speculative:
+        spec_local = {"speculative": "ngram", "spec_k": spec_k}
+        spec_hpc = dict(spec_local)
     local_engine = ServingEngine(local_cfg, max_seq=max_seq, rng=rng,
                                  scheduler_slots=scheduler_slots,
-                                 prefix_cache_pages=prefix_cache_pages)
+                                 prefix_cache_pages=prefix_cache_pages,
+                                 **spec_local)
+    if speculative and hasattr(local_engine.model, "propose_k"):
+        # cross-tier: the local tier's model (params and all) drafts
+        # for the hpc-tier verifier
+        spec_hpc = {"drafter_cfg": local_cfg,
+                    "drafter_params": local_engine.params,
+                    "spec_k": spec_k}
     hpc_engine = ServingEngine(hpc_cfg, max_seq=max_seq, rng=rng,
                                scheduler_slots=scheduler_slots,
-                               prefix_cache_pages=prefix_cache_pages)
+                               prefix_cache_pages=prefix_cache_pages,
+                               **spec_hpc)
     local_engine.warmup()
     hpc_engine.warmup()
 

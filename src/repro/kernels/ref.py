@@ -37,8 +37,9 @@ def mha(q, k, v, *, causal: bool = True, kv_len=None, q_offset=None, scale=None,
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
     kv_len: optional (B,) or scalar — positions >= kv_len are masked out
             (decode with a partially-filled cache).
-    q_offset: optional scalar — absolute position of q[0] for causal masking
-            against a longer kv (prefill continuation / decode).
+    q_offset: optional scalar or (B,) — absolute position of q[0] for causal
+            masking against a longer kv (prefill continuation / decode; the
+            vector form is a speculative verify window at per-slot positions).
     """
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
@@ -56,11 +57,19 @@ def mha(q, k, v, *, causal: bool = True, kv_len=None, q_offset=None, scale=None,
 
     mask = jnp.ones((Sq, Skv), dtype=bool)
     if causal:
-        off = q_offset if q_offset is not None else (Skv - Sq)
-        qpos = jnp.arange(Sq)[:, None] + off
-        kpos = jnp.arange(Skv)[None, :]
-        mask = kpos <= qpos
-    mask = jnp.broadcast_to(mask, (B, 1, 1, Sq, Skv))
+        off = jnp.asarray(q_offset if q_offset is not None else (Skv - Sq))
+        if off.ndim:                             # per-slot query offsets
+            qpos = jnp.arange(Sq)[None, :, None] + off[:, None, None]
+            kpos = jnp.arange(Skv)[None, None, :]
+            mask = kpos <= qpos                  # (B, Sq, Skv)
+        else:
+            qpos = jnp.arange(Sq)[:, None] + off
+            kpos = jnp.arange(Skv)[None, :]
+            mask = kpos <= qpos
+    if mask.ndim == 2:
+        mask = jnp.broadcast_to(mask, (B, 1, 1, Sq, Skv))
+    else:
+        mask = mask[:, None, None]               # (B, 1, 1, Sq, Skv)
     if kv_len is not None:
         kv_len = jnp.asarray(kv_len)
         kv_len = kv_len.reshape(-1, 1, 1, 1, 1) if kv_len.ndim else kv_len

@@ -192,7 +192,8 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
                                       block_tables=block_tables,
                                       kv_len=pos + 1, impl=impl,
                                       logit_soft_cap=logit_soft_cap)
-        else:  # paged chunked prefill: chunk_plan keeps chunks in one page
+        elif jnp.ndim(cache_index) == 0:
+            # paged chunked prefill: chunk_plan keeps chunks in one page
             assert chunked and B == 1
             pid = block_tables[0, cache_index // page]
             ck = jax.lax.dynamic_update_slice(
@@ -204,6 +205,27 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
             gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
             out = ops.chunk_attention(q, gk, gv, q_offset=cache_index,
                                       kv_len=cache_index + S, impl=impl,
+                                      logit_soft_cap=logit_soft_cap)
+        else:  # paged verify window: per-token scatter at per-slot positions
+            pos = jnp.asarray(cache_index)                        # (B,)
+            pos2d = pos[:, None] + jnp.arange(S)[None, :]         # (B, S)
+            npg = block_tables.shape[1]
+            # positions past the slot's mapped span land on the trash page
+            # (the scheduler guards this; the clamp keeps a stray window
+            # from corrupting a mapped page via take_along_axis clipping)
+            valid = (pos2d // page) < npg
+            pid = jnp.take_along_axis(block_tables,
+                                      jnp.minimum(pos2d // page, npg - 1),
+                                      axis=1)
+            pid = jnp.where(valid, pid, 0)
+            off = jnp.where(valid, pos2d % page, 0)
+            ck = ck.at[pid, :, off, :].set(k.transpose(0, 2, 1, 3).astype(ck.dtype))
+            cv = cv.at[pid, :, off, :].set(v.transpose(0, 2, 1, 3).astype(cv.dtype))
+            new_cache = (ck, cv)
+            gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
+            gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
+            out = ops.chunk_attention(q, gk, gv, q_offset=pos,
+                                      kv_len=pos + S, impl=impl,
                                       logit_soft_cap=logit_soft_cap)
     elif cache is not None:
         ck, cv = cache

@@ -340,6 +340,67 @@ class TransformerLM:
         new_cache["pos"] = start + T
         return logits, new_cache
 
+    def verify_chunk(self, params, tokens, cache, extra=None):
+        """Speculative verification (the VERIFIER side of the
+        ``propose_k``/``verify_chunk`` contract): batch-score a (B, W)
+        window — each slot's last emitted token followed by its draft —
+        whose first token sits at ``cache["pos"]`` (scalar or per-slot
+        (B,) vector). The window's K/V is written at positions
+        pos..pos+W-1 through the same chunked-prefill machinery
+        admissions use (contiguous or paged), and logits come back for
+        ALL W positions: (B, W, V).
+
+        ``cache["pos"]`` is NOT advanced — the caller moves it forward by
+        the number of accepted tokens. Rejected positions need no undo:
+        they sit beyond the new ``pos``, are masked out of every
+        subsequent attention by ``kv_len``, and are rewritten in place
+        before ``pos`` ever reaches them again (the same invariant plain
+        decode relies on for its own in-flight token)."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        start = cache["pos"]
+        x = layers.embed(tokens, params["embed"], cfg)
+        positions = (start + jnp.arange(T) if jnp.ndim(start) == 0
+                     else start[:, None] + jnp.arange(T)[None, :])
+        x, new_cache = self._run_cached(params, x, positions, cache,
+                                        cache_index=start, chunked=True)
+        x = layers.rmsnorm(x, params["ln_f"], cfg)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = layers.unembed(x, head, cfg)
+        new_cache["pos"] = start
+        return logits, new_cache
+
+    def propose_k(self, params, token, cache, k: int, extra=None):
+        """Speculative drafting (the DRAFTER side of the contract):
+        greedily decode ``k`` tokens from ``token`` (B, 1), writing K/V
+        for the input token and all k drafts at pos..pos+k (one step past
+        the last draft, so a fully-accepted window — which advances the
+        caller's pos by k+1 — leaves no hole in the drafter's history).
+        Returns (drafts (B, k) int32, cache with pos advanced by k+1).
+
+        The drafter's own cache rolls back the same way the verifier's
+        does — the serving layer just resets ``pos`` to the accepted
+        length; positions beyond it are dead until rewritten. (Recurrent
+        families can't offer that, which is why they don't implement
+        this contract and the scheduler falls back to plain decode.)"""
+        cfg = self.cfg
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+
+        def body(carry, _):
+            tok, cache = carry
+            logits, cache = self.decode_step(params, tok, cache)
+            logits = jnp.where(vocab_ok, logits.astype(jnp.float32), -1e30)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, cache), nxt[:, 0]
+
+        # One extra step so the cache also holds K/V for the k-th draft:
+        # full acceptance advances the caller's pos by k+1 (k drafts plus
+        # the bonus token), and the next propose must attend over every
+        # position below it.
+        (_, cache), drafts = jax.lax.scan(body, (token, cache), None,
+                                          length=k + 1)
+        return jnp.moveaxis(drafts, 0, 1)[:, :k], cache
+
     def decode_step(self, params, token, cache, extra=None):
         cfg = self.cfg
         pos = cache["pos"]

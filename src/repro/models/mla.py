@@ -92,7 +92,8 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
             cc = cc.at[pid, off, :].set(c_kv[:, 0, :].astype(cc.dtype))
             cr = cr.at[pid, off, :].set(k_rope[:, 0, :].astype(cr.dtype))
             kv_len = pos + 1
-        else:  # paged chunked prefill (chunk_plan keeps chunks in one page)
+        elif jnp.ndim(cache_index) == 0:
+            # paged chunked prefill (chunk_plan keeps chunks in one page)
             assert chunked and B == 1
             pid = block_tables[0, cache_index // page]
             cc = jax.lax.dynamic_update_slice(
@@ -100,6 +101,19 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
             cr = jax.lax.dynamic_update_slice(
                 cr, k_rope.astype(cr.dtype), (pid, cache_index % page, 0))
             kv_len = cache_index + S
+        else:  # paged verify window: per-token latent scatter, per-slot pos
+            pos = jnp.asarray(cache_index)                        # (B,)
+            pos2d = pos[:, None] + jnp.arange(S)[None, :]         # (B, S)
+            npg = block_tables.shape[1]
+            valid = (pos2d // page) < npg   # stray positions -> trash page
+            pid = jnp.take_along_axis(block_tables,
+                                      jnp.minimum(pos2d // page, npg - 1),
+                                      axis=1)
+            pid = jnp.where(valid, pid, 0)
+            off = jnp.where(valid, pos2d % page, 0)
+            cc = cc.at[pid, off, :].set(c_kv.astype(cc.dtype))
+            cr = cr.at[pid, off, :].set(k_rope.astype(cr.dtype))
+            kv_len = pos + S
         new_cache = (cc, cr)
         kv_latent = ops.gather_kv_pages(cc, block_tables).astype(x.dtype)
         k_rope_all = ops.gather_kv_pages(cr, block_tables).astype(x.dtype)

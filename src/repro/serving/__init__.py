@@ -5,10 +5,13 @@ from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.serving.broker import SessionBroker, SessionHandle, SessionResult
 from repro.serving.pagepool import PagePool, SlotSplicer, chunk_plan
 from repro.serving.prefix_cache import CacheStats, PrefixCache, PrefixLease
+from repro.serving.speculative import (DraftModel, ModelDrafter,
+                                       NgramDrafter, SpecStats)
 
 __all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
            "GenerationParams", "SamplerConfig",
            "ContinuousBatcher", "Request",
            "SessionBroker", "SessionHandle", "SessionResult",
            "PagePool", "SlotSplicer", "chunk_plan",
-           "CacheStats", "PrefixCache", "PrefixLease"]
+           "CacheStats", "PrefixCache", "PrefixLease",
+           "DraftModel", "ModelDrafter", "NgramDrafter", "SpecStats"]

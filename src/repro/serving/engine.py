@@ -59,7 +59,9 @@ class ServingEngine:
                  max_seq: int = 256, sampler: SamplerConfig | None = None,
                  scheduler_slots: int = 4, prefill_chunk: int = 32,
                  page: int = 16, prefix_cache_pages: int = 256,
-                 paged_kv: bool = True):
+                 paged_kv: bool = True, speculative: str = "off",
+                 spec_k: int = 4, drafter_cfg: ModelConfig | None = None,
+                 drafter_params=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -77,6 +79,25 @@ class ServingEngine:
         # the contiguous splice path — kept as the A/B lever the
         # bytes-copied-per-admission benchmark flips.
         self.paged_kv = paged_kv
+        # speculative decoding for the batcher's decode path: "off",
+        # "ngram" (prompt-lookup self-drafting), or "model" (a second,
+        # cheaper model registered below — STREAM's cross-tier pairing).
+        # Families without the propose_k/verify_chunk contract fall back
+        # to plain decode regardless (see serving/scheduler.py).
+        self.speculative = speculative
+        self.spec_k = spec_k
+        self.drafter = None
+        if drafter_cfg is not None:
+            from repro.serving.speculative import DraftModel
+            assert drafter_cfg.vocab_size == cfg.vocab_size, \
+                "drafter and verifier must share a vocabulary"
+            dmodel = build_model(drafter_cfg)
+            if drafter_params is None:
+                drafter_params = dmodel.init(jax.random.fold_in(rng, 7))
+            self.drafter = DraftModel(model=dmodel, params=drafter_params,
+                                      cfg=drafter_cfg)
+            if speculative == "off":
+                self.speculative = "model"
 
         self._prefill_chunk = jax.jit(self.model.prefill_chunk)
         self._decode = jax.jit(self.model.decode_step)

@@ -203,3 +203,43 @@ def sample_slots(logits, rng, sc: SamplerConfig, temps, top_ps, seeds, steps):
     # single argmax on the hot path
     return jax.lax.cond(jnp.any(temps > 0.0), stochastic,
                         lambda _: greedy, None)
+
+
+def speculative_accept(logits, drafts, draft_len, rng, sc: SamplerConfig,
+                       temps, top_ps, seeds, steps):
+    """Acceptance step for speculative decoding — the deterministic-stream
+    specialization of rejection sampling.
+
+    ``logits`` (B, W, V) are ``verify_chunk`` scores for a window of W
+    tokens whose first element is the slot's last emitted token; window
+    position i therefore conditions on the true prefix plus the first i
+    draft tokens. ``drafts`` (B, W-1) are the proposed continuations and
+    ``draft_len`` (B,) how many of them are real (the rest is padding);
+    ``steps`` (B,) is each slot's sample-stream step for window position 0.
+
+    At every position the TARGET token g_i is drawn through the exact
+    ``sample_slots`` pipeline plain decode would use — same (seed, step)
+    key for seeded slots, ``fold_in(rng, i)`` for shared-rng slots — and
+    a draft is accepted iff it EQUALS that draw. The emitted tokens are
+    always a prefix of g (the correction token at the first mismatch IS
+    g_i, and g_{n_acc} doubles as the bonus token when every draft
+    survives), so speculative output is token-identical to plain decode:
+    greedy slots emit the argmax chain, seeded slots replay their pinned
+    stream consuming exactly ``n_acc + 1`` steps, and the marginal
+    distribution of every emitted token is the target's (each g_i is an
+    ancestral draw from the target model — classic rejection sampling
+    guarantees this only in distribution; the pinned stream makes it
+    exact per key).
+
+    Returns ``(g (B, W), n_acc (B,))``: the target draws and the number
+    of accepted draft tokens (``n_acc + 1`` tokens — ``g[:, :n_acc+1]``
+    — advance the stream this tick).
+    """
+    B, W, _ = logits.shape
+    g = jnp.stack(
+        [sample_slots(logits[:, i], jax.random.fold_in(rng, i), sc,
+                      temps, top_ps, seeds, steps + i)
+         for i in range(W)], axis=1).astype(jnp.int32)            # (B, W)
+    ok = (drafts == g[:, :-1]) & (jnp.arange(W - 1)[None, :] < draft_len[:, None])
+    n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    return g, n_acc

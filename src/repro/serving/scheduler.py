@@ -51,7 +51,9 @@ import numpy as np
 from repro.models.common import cache_layout, round_up
 from repro.serving.pagepool import PagePool, SlotSplicer, chunk_plan
 from repro.serving.prefix_cache import PrefixCache, PrefixLease
-from repro.serving.sampler import GenerationParams, StopMatcher, sample_slots
+from repro.serving.sampler import (GenerationParams, StopMatcher,
+                                   sample_slots, speculative_accept)
+from repro.serving.speculative import ModelDrafter, NgramDrafter, SpecStats
 from repro.serving.tokenizer import ByteTokenizer
 
 
@@ -243,6 +245,39 @@ class ContinuousBatcher:
         self.transfers = 0           # packed reads; one per decode tick
         self.adm_transfers = 0       # scalar first-token reads; one per admission
 
+        # ---- speculative decoding (propose_k / verify_chunk contract).
+        # A tick with drafts runs ONE fused verify step over a (B, W)
+        # window (W = spec_k + 1: each slot's last emitted token plus its
+        # draft) instead of a single-token decode, emitting the accepted
+        # prefix plus the target's correction/bonus token. Families that
+        # don't implement the contract (recurrent state can't roll back)
+        # silently fall back to plain decode, as does any tick with no
+        # drafts on offer. host mirror `_pos` tracks each slot's absolute
+        # KV position for draft budgeting.
+        spec_mode = getattr(engine, "speculative", "off") or "off"
+        self.spec_k = min(int(getattr(engine, "spec_k", 4)), max(page - 1, 1))
+        draft = getattr(engine, "drafter", None)
+        ok = (spec_mode != "off" and self.spec_k > 0
+              and hasattr(self.model, "verify_chunk"))
+        if spec_mode == "model":
+            ok = ok and draft is not None and hasattr(draft.model, "propose_k")
+        self.spec_mode = spec_mode if ok else "off"
+        self.spec = self.spec_mode != "off"
+        self.spec_stats = SpecStats()
+        # test/benchmark injection point: draft_hook(slot, req) -> list of
+        # proposed token ids (forces exact acceptance patterns)
+        self.draft_hook: Optional[Callable[[int, Request], list]] = None
+        self._pos = np.zeros(self.B, np.int64)
+        if self.spec:
+            self._draft_len = np.zeros(self.B, np.int32)
+            self._draft_host = np.zeros((self.B, self.spec_k), np.int32)
+            self._verify = jax.jit(self._make_verify())
+            self._ngram = (NgramDrafter(self.spec_k)
+                           if self.spec_mode == "ngram" else None)
+            self._drafter = (ModelDrafter(draft, self.B, self.max_seq,
+                                          page=page, k=self.spec_k)
+                             if self.spec_mode == "model" else None)
+
     # ------------------------------------------------------------ jitted fns
     def _make_fused(self):
         """One tick: decode all slots, sample, mask EOS/length per slot.
@@ -294,6 +329,101 @@ class ContinuousBatcher:
             return jax.lax.dynamic_update_slice(tok, t[:, None], (slot, 0))
 
         return first
+
+    def _make_verify(self):
+        """One speculative tick: score the whole (B, W) window in one
+        fused ``verify_chunk``, replay the target's sample stream over
+        it (``speculative_accept``), and emit the accepted prefix plus
+        the correction/bonus draw — n_acc + 1 tokens per slot, clamped
+        by the slot's budget and truncated at the first EOS, exactly as
+        plain decode would have produced them one tick at a time.
+
+        Rollback is position arithmetic, not memory management: the
+        cache pointer advances by ``n_emit`` only, so rejected window
+        positions stay beyond ``pos`` — masked out of every later
+        attention by ``kv_len`` and rewritten in place before ``pos``
+        reaches them (paged slots' out-of-span window writes already
+        self-redirect to the pool's trash page). No page is freed, no
+        block-table entry beyond truncation survives, and tree-owned
+        pages are never touched.
+
+        Returns the next tok buffer, the cache, and a packed
+        (B, W + 3) int32 [g_0..g_{W-1}, n_emit, done, n_acc] — still one
+        host transfer per tick.
+        """
+        model, sampler = self.model, self.engine.sampler
+        eos, pad = self.tokenizer.eos_id, self.tokenizer.pad_id
+        W = self.spec_k + 1
+
+        def verify(params, tok, drafts, draft_len, cache, active, gen,
+                   max_gen, temp, top_p, seed, rng):
+            run = active
+            win = jnp.concatenate([tok, drafts], axis=1)          # (B, W)
+            logits, cache = model.verify_chunk(params, win, cache)
+            g, n_acc = speculative_accept(logits, drafts, draft_len, rng,
+                                          sampler, temp, top_p, seed, gen)
+            # budget first (>= 1: a run slot always emits its correction
+            # token), then truncate at the first EOS inside the emission
+            n_emit = jnp.minimum(n_acc + 1, jnp.maximum(max_gen - gen, 1))
+            idx = jnp.arange(W)[None, :]
+            eos_hit = (g == eos) & (idx < n_emit[:, None])
+            any_eos = eos_hit.any(axis=1)
+            first_eos = jnp.where(any_eos, jnp.argmax(eos_hit, axis=1), W)
+            n_emit = jnp.minimum(n_emit, first_eos + 1)
+            n_emit = jnp.where(run, n_emit, 0).astype(gen.dtype)
+            gen2 = gen + n_emit
+            done_now = run & (any_eos | (gen2 >= max_gen))
+            alive = run & ~done_now
+            # the rollback: pos advances past accepted tokens only;
+            # finished/parked slots park at 0 (same as the plain tick)
+            cache["pos"] = jnp.where(alive, cache["pos"] + n_emit, 0)
+            last = jnp.take_along_axis(
+                g, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)
+            tok2 = jnp.where(run[:, None], last, pad).astype(jnp.int32)
+            out = jnp.where(run[:, None], g, pad)
+            packed = jnp.concatenate(
+                [out, n_emit[:, None],
+                 done_now.astype(jnp.int32)[:, None], n_acc[:, None]],
+                axis=1).astype(jnp.int32)
+            return tok2, cache, packed
+
+        return verify
+
+    def _prepare_drafts(self) -> bool:
+        """Fill the per-slot draft buffers for this tick. Returns False
+        when the tick should fall back to plain decode: nothing drafted
+        anywhere, or (contiguous mode only) an active slot so close to
+        the seq-axis end that a W-token window write would clip. Paged
+        slots need no such gate — window positions beyond a slot's
+        mapped pages scatter to the pool's trash page."""
+        W = self.spec_k + 1
+        self._draft_len[:] = 0
+        any_draft = False
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            if not self.paged and self._pos[slot] + W > self.max_seq:
+                return False
+            cap = min(self.spec_k, int(self._maxgen[slot]) -
+                      int(self._gen[slot]) - 1)
+            if cap <= 0:
+                continue
+            if self.draft_hook is not None:
+                d = list(self.draft_hook(slot, req))[:cap]
+            elif self.spec_mode == "model":
+                # device-side proposal for the whole batch (below);
+                # only the per-slot clamp is decided here
+                self._draft_len[slot] = cap
+                any_draft = True
+                continue
+            else:
+                history = (req._kv_ids or []) + req.output_ids
+                d = self._ngram.propose(history)[:cap]
+            if d:
+                self._draft_host[slot, :len(d)] = d
+                self._draft_len[slot] = len(d)
+                any_draft = True
+        return any_draft
 
     # ------------------------------------------------------------ admission
     def submit(self, req: Request):
@@ -548,6 +678,14 @@ class ContinuousBatcher:
         self._temp[slot] = adm.temp
         self._topp[slot] = adm.top_p
         self._seed[slot] = adm.seed
+        self._pos[slot] = len(adm.ids)
+        if self.spec:
+            self._draft_len[slot] = 0
+            if self._drafter is not None:
+                # the drafter ingests the prompt off the TTFT path (the
+                # first token already left); its splice traffic is
+                # accounted on the drafter, not the admission contract
+                self._drafter.admit(slot, adm.ids)
 
     # ------------------------------------------------------------ tick
     def _finish(self, slot: int, cancelled=False):
@@ -597,6 +735,11 @@ class ContinuousBatcher:
             req.on_done(req)
         self.active[slot] = None
         self._active_m[slot] = False
+        self._pos[slot] = 0
+        if self.spec:
+            # release draft state (cancel mid-verify lands here too):
+            # the slot re-admits with a clean window
+            self._draft_len[slot] = 0
         self._freed = True
 
     def _in_flight(self) -> int:
@@ -613,6 +756,55 @@ class ContinuousBatcher:
         if self.pool is not None:
             total += self.pool.bytes_copied
         return total / max(self.admissions, 1)
+
+    def _spec_tick(self, rng):
+        """One speculative tick (drafts already prepared): propose —
+        verify — emit. Mixed batches come for free: a slot with
+        ``draft_len == 0`` rides the same window as a plain decode (its
+        window is just its input token plus dead padding; it still emits
+        exactly its one target draw)."""
+        W = self.spec_k + 1
+        if self.spec_mode == "model" and self.draft_hook is None:
+            drafts = self._drafter.propose(self.tok, self.cache["pos"])
+        else:
+            drafts = jnp.asarray(self._draft_host)
+        lens = self._draft_len.copy()
+        self.tok, self.cache, packed = self._verify(
+            self.engine.params, self.tok, drafts, jnp.asarray(lens),
+            self.cache, self._active_m, self._gen, self._maxgen,
+            self._temp, self._topp, self._seed, rng)
+        packed = np.asarray(packed)  # still the tick's one token transfer
+        self.transfers += 1
+        self.spec_stats.spec_ticks += 1
+        now = time.perf_counter()
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            n_emit = int(packed[slot, W])
+            done = int(packed[slot, W + 1])
+            self.spec_stats.proposed += int(lens[slot])
+            self.spec_stats.accepted += int(packed[slot, W + 2])
+            self.spec_stats.emitted += n_emit
+            self._pos[slot] += n_emit
+            self._gen[slot] += n_emit
+            stopped = False
+            for j in range(n_emit):
+                t = int(packed[slot, j])
+                req.output_ids.append(t)
+                if req.emit(t, self.tokenizer.decode_token(t)):
+                    # stop completed mid-window: later window tokens are
+                    # discarded — plain decode would never have produced
+                    # them (output_ids records through the stop token,
+                    # matching the plain path)
+                    req.finish_reason = "stop"
+                    self._finish(slot)
+                    stopped = True
+                    break
+            if stopped:
+                continue
+            over = req.deadline_s and (now - req.submitted_at) > req.deadline_s
+            if done or over:
+                self._finish(slot, cancelled=bool(over))
 
     def step(self) -> int:
         """One scheduler tick: admit (one chunk), fused decode, emit, reap,
@@ -638,6 +830,13 @@ class ContinuousBatcher:
             self.cache["block_tables"] = jnp.asarray(self._bt)
             self._bt_dirty = False
         self.engine.rng, k = jax.random.split(self.engine.rng)
+        if self.spec and self._prepare_drafts():
+            self._spec_tick(k)
+            if self._freed and self._adm is None:
+                self._advance_admissions()
+            return self._in_flight()
+        if self.spec:
+            self.spec_stats.plain_ticks += 1
         self.tok, self.cache, packed = self._fused(
             self.engine.params, self.tok, self.cache,
             self._active_m, self._gen, self._maxgen,
@@ -652,6 +851,7 @@ class ContinuousBatcher:
             if emitted:
                 req.output_ids.append(nxt)
                 self._gen[slot] += 1
+                self._pos[slot] += 1
                 if req.emit(nxt, self.tokenizer.decode_token(nxt)):
                     # a stop sequence completed: it (and anything after
                     # it) is recorded in output_ids but never delivered

@@ -1,0 +1,146 @@
+"""Speculative-decoding draft sources for the continuous batcher.
+
+The scheduler's speculative tick needs k proposed tokens per slot from
+*somewhere*; this module provides the two production sources plus the
+bookkeeping they share:
+
+* :class:`ModelDrafter` — a second, cheaper model registered as the
+  drafter (STREAM's cross-tier pairing: the local-tier model drafts for
+  the hpc/cloud-tier verifier). It keeps its own contiguous (B, max_seq)
+  KV cache alongside the batcher's slots: at admission the prompt is
+  prefilled batch=1 and spliced into the slot row; each tick
+  ``propose_k`` ingests the slot's last emitted token plus k-1 greedy
+  continuations. Rollback is free — the scheduler simply hands the
+  drafter the verifier's post-acceptance positions next tick, so the
+  accepted prefix of the drafter's own writes stays valid and the
+  rejected tail is dead until overwritten (the same in-place invariant
+  the verifier uses). Recurrent families can't roll a destructive state
+  back that way, which is why only models implementing ``propose_k``
+  qualify.
+
+* :class:`NgramDrafter` — n-gram / prompt-lookup self-drafting (host
+  side, no second model): propose the continuation that followed the
+  most recent earlier occurrence of the sequence's tail n-gram. Free
+  wins on repetitive spans; the local tier's default.
+
+Neither source affects *what* is emitted — acceptance in
+``sampler.speculative_accept`` replays the target's own sample stream,
+so a bad draft only costs speed. ``SpecStats`` aggregates the
+proposed/accepted counters the benchmark and CI gate report.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cache_layout, round_up
+from repro.serving.pagepool import SlotSplicer, chunk_plan
+
+
+@dataclass
+class SpecStats:
+    """Per-batcher speculative counters (host side, cumulative)."""
+    proposed: int = 0        # draft tokens offered to the verifier
+    accepted: int = 0        # draft tokens that matched the target draw
+    emitted: int = 0         # tokens emitted by speculative ticks
+    spec_ticks: int = 0      # fused verify steps
+    plain_ticks: int = 0     # ticks that fell back to plain decode
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+    @property
+    def tokens_per_tick(self) -> float:
+        return self.emitted / max(self.spec_ticks, 1)
+
+
+class NgramDrafter:
+    """Prompt-lookup self-drafting: match the longest tail n-gram of the
+    sequence so far against its own history and propose what followed
+    the most recent earlier occurrence."""
+
+    def __init__(self, k: int = 4, ngrams=(3, 2, 1)):
+        self.k = k
+        self.ngrams = tuple(sorted(ngrams, reverse=True))
+
+    def propose(self, ids: list) -> list:
+        for n in self.ngrams:
+            if len(ids) <= n:
+                continue
+            tail = ids[-n:]
+            for i in range(len(ids) - n - 1, -1, -1):
+                if ids[i:i + n] == tail:
+                    out = ids[i + n:i + n + self.k]
+                    if out:
+                        return out
+                    break
+        return []
+
+
+@dataclass
+class DraftModel:
+    """A drafter registered on a ServingEngine: the model, its params,
+    and its config (vocab must match the verifier's — acceptance
+    compares token ids)."""
+    model: object
+    params: object
+    cfg: object
+
+
+class ModelDrafter:
+    """Device-side state for a model drafter attached to one batcher:
+    a private contiguous (B, max_seq) cache plus the jitted
+    prefill/propose entry points.
+
+    The splice traffic of drafter admissions is tracked separately
+    (``bytes_copied``) and deliberately NOT folded into the pool/splicer
+    counters behind ``bytes_copied_per_admission`` — the zero-copy
+    admission contract is about the VERIFIER's KV plumbing; the drafter
+    is an optional accelerator with its own budget."""
+
+    def __init__(self, draft: DraftModel, slots: int, max_seq: int, *,
+                 page: int, k: int):
+        self.model, self.params = draft.model, draft.params
+        self.cfg = draft.cfg
+        self.k = k
+        self.page = page
+        self.max_seq = max_seq
+        self.cache = self.model.init_cache(slots, max_seq)
+        self.cache["pos"] = jnp.zeros((slots,), jnp.int32)
+        self._splicer = SlotSplicer(cache_layout(self.model.cache_specs()))
+        self._prefill = jax.jit(self.model.prefill_chunk)
+
+        def propose(params, tok, cache, pos):
+            cache = dict(cache)
+            cache["pos"] = pos
+            return self.model.propose_k(params, tok, cache, k)
+
+        self._propose = jax.jit(propose)
+
+    @property
+    def bytes_copied(self) -> int:
+        return self._splicer.bytes_copied
+
+    def admit(self, slot: int, ids: list):
+        """Prefill the prompt through the drafter (batch=1, page-aligned
+        chunks) and splice it into the slot's row."""
+        one = self.model.init_cache(1, self.max_seq)
+        off = 0
+        for n in chunk_plan(0, len(ids), self.page):
+            chunk = jnp.asarray([ids[off:off + n]], jnp.int32)
+            _, one = self._prefill(self.params, chunk, one)
+            off += n
+        used = min(round_up(len(ids), self.page), self.max_seq)
+        self.cache = self._splicer(self.cache, one, slot, used)
+
+    def propose(self, tok, pos):
+        """One fused draft step for the whole batch: tok (B, 1) is each
+        slot's last emitted token, pos (B,) the verifier's post-
+        acceptance positions (device array). Returns drafts (B, k) on
+        device; the drafter cache advances in place."""
+        drafts, self.cache = self._propose(self.params, tok, self.cache, pos)
+        return drafts

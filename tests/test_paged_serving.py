@@ -265,3 +265,103 @@ def test_bytes_copied_per_admission_positive_contiguous():
     run_one(cb, e, PROMPT, max_new=4)
     assert cb.bytes_copied_per_admission() > 0
     e.shutdown()
+
+
+# ---------------------------------------------- speculative rollback edges
+def _spec_batcher(engine, **kw):
+    """A speculating batcher over the module engine (which defaults to
+    speculation off): flip the flag only for construction."""
+    engine.speculative = "ngram"
+    try:
+        cb = ContinuousBatcher(engine, slots=2, max_seq=96, **kw)
+    finally:
+        engine.speculative = "off"
+    assert cb.spec
+    return cb
+
+
+def test_spec_rejection_on_page_boundary(engine):
+    """Rejection landing EXACTLY on a page boundary: the window wrote
+    K/V into a freshly mapped page, the rejected tail position sits as
+    the new page's first entry, and rollback is pure position
+    arithmetic — no page is freed or remapped, the free-guard never
+    trips, and the emitted tokens match plain decode bitwise."""
+    ids = list(range(2, 2 + 20))             # pos starts at 20, page=16
+    ref = engine.generate(ids, max_new_tokens=14, stop_on_eos=False).tokens
+    cb = _spec_batcher(engine, prefix_pages=64)
+    # script acceptance per tick so pos crosses 32 mid-window:
+    # tick1 full accept (pos 20->25), tick2 reject at 2 (25->28),
+    # tick3 reject at 3 (28->32): position 32 -- page 2's first slot --
+    # holds the REJECTED draft's K/V and must be rewritten in place
+    corrupt_at = {1: None, 6: 2, 9: 3}
+    def hook(slot, req):
+        pos = len(req.output_ids)
+        d = list(ref[pos:pos + cb.spec_k])
+        at = corrupt_at.get(pos, None)
+        if at is not None and len(d) > at:
+            d[at] = (d[at] + 1) % 300
+        return d
+    cb.draft_hook = hook
+    req = Request(rid="pb", prompt_ids=ids, max_new_tokens=14)
+    cb.submit(req)
+    cb.step()                                # admission + first token
+    mapped = set(cb._bt[0][cb._bt[0] != 0])
+    while not req.done:
+        cb.step()
+        if not req.done:
+            # rollback never frees a mapped page (truncation, not free)
+            assert not (mapped & set(cb.pool._free))
+            mapped |= set(cb._bt[0][cb._bt[0] != 0])
+    assert req.output_ids == ref
+    assert cb.spec_stats.accepted > 0
+
+
+def test_spec_rejection_never_touches_tree_pages(engine):
+    """A warm speculating session decodes on top of prefix-cache pages
+    its block table maps read-only. Forced rejections every tick must
+    roll back only the slot's private tail — afterwards the tree's
+    pages are still intact (a third, plain request hits the cache and
+    decodes the exact cold tokens) and none sit on the free list."""
+    cb = _spec_batcher(engine, prefix_pages=64)
+    cold = run_one(cb, engine, PROMPT, max_new=6)
+    assert cold["hit"] == 0
+    ref = list(cold["tokens"])
+    def hook(slot, req):
+        pos = len(req.output_ids)
+        return [(t + 1) % 300 for t in ref[pos:pos + cb.spec_k]]  # all wrong
+    cb.draft_hook = hook
+    warm = run_one(cb, engine, PROMPT, max_new=6)
+    assert warm["hit"] > 0                   # decoding over tree pages
+    assert warm["tokens"] == ref             # identity despite rejections
+    assert cb.spec_stats.accepted == 0
+    tree_pids = set(cb.prefix._pids)
+    assert tree_pids and not (tree_pids & set(cb.pool._free))
+    cb.draft_hook = None
+    third = run_one(cb, engine, PROMPT, max_new=6)
+    assert third["hit"] > 0 and third["tokens"] == ref
+
+
+def test_cancel_mid_verify_releases_draft_state(engine):
+    """Cancel while a slot is actively speculating: the slot is
+    reclaimed, its draft state is cleared, no page is leaked or double-
+    freed, and the next session reuses the slot cleanly."""
+    cb = _spec_batcher(engine, prefix_pages=64)
+    n_free0 = len(cb.pool._free)
+    req = Request(rid="v", prompt_ids=engine.tokenizer.encode(PROMPT),
+                  max_new_tokens=40)
+    cb.submit(req)
+    while cb.spec_stats.spec_ticks == 0 and not req.done:
+        cb.step()                            # at least one verify ran
+    slot = cb.active.index(req)
+    assert cb._draft_len[slot] >= 0
+    assert cb.cancel(req)
+    assert req.cancelled and req.finish_reason == "cancelled"
+    assert cb.active[slot] is None
+    assert cb._draft_len[slot] == 0
+    cb.run_until_drained()
+    # every non-tree page is back on the free list, none twice
+    free = list(cb.pool._free)
+    assert len(free) == len(set(free))
+    assert len(free) + len(cb.prefix._pids) == n_free0
+    out = run_one(cb, engine, PROMPT + " again", max_new=4)
+    assert len(out["tokens"]) == 4

@@ -1,0 +1,366 @@
+"""Cross-tier speculative decoding: token identity and the
+propose_k/verify_chunk contract.
+
+Speculation must never change WHAT is emitted — only how fast. The
+acceptance rule replays the target's own sample stream (window position
+i draws through the exact ``sample_slots`` call plain decode would make
+at step gen+i), so every test here asserts literal token equality
+against a plain-decode reference: greedy AND seeded, paged AND
+contiguous, for every (drafter, verifier) pairing, including acceptance
+forced to 0%, 100%, and mid-chunk rejection through the batcher's
+``draft_hook`` injection point. The model-layer tests pin the other
+half of the contract: ``verify_chunk`` batch-scores a window through
+the same chunked-prefill machinery admissions use, bitwise equal to
+``prefill_chunk`` on the same cache.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving import (ContinuousBatcher, GenerationParams, Request,
+                           ServingEngine)
+from repro.serving.speculative import DraftModel, NgramDrafter
+
+FAMILIES = ("minitron-8b", "deepseek-v2-lite-16b")   # dense GQA + MLA
+PROMPT = "speculative parity prompt"
+SEEDED = GenerationParams(max_tokens=12, temperature=0.9, seed=42)
+
+
+def run_one(cb, engine, prompt, max_new=12, params=None, rid="r"):
+    req = Request(rid=rid, prompt_ids=engine.tokenizer.encode(prompt),
+                  max_new_tokens=max_new, params=params)
+    cb.submit(req)
+    cb.run_until_drained()
+    assert req.done, req
+    return req.output_ids
+
+
+def replay_hook(ref, k):
+    """A drafter that proposes the plain run's own continuation —
+    forced 100% acceptance (the verifier's draws ARE the reference)."""
+    def hook(slot, req):
+        pos = len(req.output_ids)
+        return list(ref[pos:pos + k])
+    return hook
+
+
+def corrupt_hook(ref, k, at):
+    """Replay drafts with position ``at`` flipped (at="all": every
+    position) — forced rejection exactly there."""
+    def hook(slot, req):
+        pos = len(req.output_ids)
+        d = list(ref[pos:pos + k])
+        if at == "all":
+            d = [(t + 1) % 300 for t in d]
+        elif len(d) > at:
+            d[at] = (d[at] + 1) % 300
+        return d
+    return hook
+
+
+@pytest.fixture(scope="module", params=[(a, p) for a in FAMILIES
+                                        for p in (True, False)],
+                ids=[f"{a}-{'paged' if p else 'contig'}"
+                     for a in FAMILIES for p in (True, False)])
+def fam(request):
+    """One engine per (family, paged) combo, shared across tests; each
+    test builds its own batcher (cheap — jitted fns are cached) and may
+    flip ``engine.speculative`` before doing so."""
+    arch, paged = request.param
+    cfg = get_smoke_config(arch).replace(vocab_size=300, vocab_pad_to=64)
+    eng = ServingEngine(cfg, max_seq=96, paged_kv=paged)
+    cb = ContinuousBatcher(eng, slots=2, max_seq=96, page=16, prefix_pages=24)
+    assert not cb.spec               # engine default: speculation off
+    ref = {"plain": run_one(cb, eng, PROMPT),
+           "seeded": run_one(cb, eng, "seeded spec", params=SEEDED)}
+    yield arch, paged, eng, ref
+    eng.shutdown()
+
+
+def spec_cb(eng, mode="ngram", slots=2):
+    eng.speculative = mode
+    cb = ContinuousBatcher(eng, slots=slots, max_seq=96, page=16,
+                           prefix_pages=24)
+    eng.speculative = "off"
+    assert cb.spec and cb.spec_mode == mode
+    return cb
+
+
+# ------------------------------------------------- forced acceptance rates
+def test_full_acceptance_fast_path(fam):
+    """Perfect drafts: every window emits spec_k+1 tokens, output is
+    token-identical, and the stats show the k+1-per-tick ceiling."""
+    arch, paged, eng, ref = fam
+    cb = spec_cb(eng)
+    cb.draft_hook = replay_hook(ref["plain"], cb.spec_k)
+    assert run_one(cb, eng, PROMPT) == ref["plain"]
+    st = cb.spec_stats
+    assert st.acceptance_rate > 0.9, st
+    assert st.tokens_per_tick > cb.spec_k, st
+
+
+def test_zero_acceptance_degrades_to_plain(fam):
+    """Adversarial drafts (every position wrong): acceptance 0, one
+    token per tick — and STILL token-identical. Rejected window
+    positions are rolled back by position arithmetic alone."""
+    arch, paged, eng, ref = fam
+    cb = spec_cb(eng)
+    cb.draft_hook = corrupt_hook(ref["plain"], cb.spec_k, "all")
+    assert run_one(cb, eng, PROMPT) == ref["plain"]
+    st = cb.spec_stats
+    # first token comes from prefill; final-tick cap hits 0 -> plain tick
+    assert st.accepted == 0, st
+    assert st.emitted == len(ref["plain"]) - 1 - st.plain_ticks, st
+    assert st.tokens_per_tick == pytest.approx(1.0), st
+
+
+def test_mid_chunk_rejection(fam):
+    """First rejection in the middle of the window: the accepted prefix
+    plus the correction token are emitted, the rejected tail is dead."""
+    arch, paged, eng, ref = fam
+    cb = spec_cb(eng)
+    cb.draft_hook = corrupt_hook(ref["plain"], cb.spec_k, 2)
+    assert run_one(cb, eng, PROMPT) == ref["plain"]
+    st = cb.spec_stats
+    assert 0 < st.acceptance_rate < 1.0, st
+
+
+# ----------------------------------------------------------- sampled paths
+def test_seeded_identity(fam):
+    """Seeded sampling: speculative emission consumes exactly the
+    (seed, step) stream plain decode would — identical tokens even at
+    temperature 0.9."""
+    arch, paged, eng, ref = fam
+    cb = spec_cb(eng)
+    cb.draft_hook = replay_hook(ref["seeded"], cb.spec_k)
+    got = run_one(cb, eng, "seeded spec", params=SEEDED)
+    assert got == ref["seeded"]
+    assert cb.spec_stats.acceptance_rate > 0.9
+
+
+def test_ngram_self_draft_identity(fam):
+    """The local tier's real drafter (prompt-lookup n-grams): whatever
+    it proposes, the output must match plain decode exactly."""
+    arch, paged, eng, ref = fam
+    cb = spec_cb(eng)
+    assert run_one(cb, eng, PROMPT) == ref["plain"]
+
+
+def test_mixed_batch_seeded_stream_invariance(fam):
+    """THE seeded-stream regression: one speculating slot and one plain
+    slot (draft_hook returns no drafts for it) share a batch; both
+    slots' streams must equal their solo seeded references — drafting
+    on slot A must not perturb slot B's (seed, step) draws."""
+    arch, paged, eng, ref = fam
+    spec_ref = ref["seeded"]
+    plain = ContinuousBatcher(eng, slots=2, max_seq=96, page=16,
+                              prefix_pages=24)
+    assert not plain.spec
+    plain_ref = run_one(plain, eng, PROMPT, params=SEEDED)   # solo ref
+    cb2 = spec_cb(eng)
+
+    def hook(slot, req):
+        if req.rid != "spec":
+            return []
+        pos = len(req.output_ids)
+        return list(spec_ref[pos:pos + cb2.spec_k])
+
+    cb2.draft_hook = hook
+    a = Request(rid="spec", prompt_ids=eng.tokenizer.encode("seeded spec"),
+                max_new_tokens=12, params=SEEDED)
+    b = Request(rid="plain", prompt_ids=eng.tokenizer.encode(PROMPT),
+                max_new_tokens=12, params=SEEDED)
+    cb2.submit(a)
+    cb2.submit(b)
+    cb2.run_until_drained()
+    assert a.output_ids == spec_ref
+    assert b.output_ids == plain_ref
+    assert cb2.spec_stats.accepted > 0       # slot A really speculated
+
+
+# ------------------------------------------------------ cross-tier drafter
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "contig"])
+def test_model_drafter_pairings(paged):
+    """Cross-tier pairing: a big dense verifier with (a) a DIFFERENT
+    small dense drafter — arbitrary disagreement, identity must hold —
+    and (b) ITSELF as drafter — acceptance must be ~1.0, which pins the
+    drafter-cache coverage invariant (the k-th draft's K/V is written,
+    so a fully-accepted window leaves no hole behind the next propose)."""
+    big = get_smoke_config("minitron-8b").replace(vocab_size=300,
+                                                  vocab_pad_to=64)
+    small = get_smoke_config("gemma-7b").replace(vocab_size=300,
+                                                 vocab_pad_to=64)
+    eng0 = ServingEngine(big, max_seq=96, paged_kv=paged)
+    cb0 = ContinuousBatcher(eng0, slots=2, max_seq=96, page=16,
+                            prefix_pages=24)
+    plain = run_one(cb0, eng0, "cross tier drafting")
+
+    eng = ServingEngine(big, max_seq=96, paged_kv=paged, drafter_cfg=small)
+    cb = ContinuousBatcher(eng, slots=2, max_seq=96, page=16, prefix_pages=24)
+    assert cb.spec_mode == "model"
+    assert run_one(cb, eng, "cross tier drafting") == plain
+    assert cb._drafter.bytes_copied > 0      # drafter splices...
+    assert cb.pool.bytes_copied + cb._splicer.bytes_copied == 0 or not paged
+    eng.shutdown()
+
+    eng2 = ServingEngine(big, max_seq=96, paged_kv=paged, drafter_cfg=big,
+                         drafter_params=eng0.params)
+    cb2 = ContinuousBatcher(eng2, slots=2, max_seq=96, page=16,
+                            prefix_pages=24)
+    assert run_one(cb2, eng2, "cross tier drafting") == plain
+    assert cb2.spec_stats.acceptance_rate == pytest.approx(1.0), \
+        cb2.spec_stats
+    eng2.shutdown()
+    eng0.shutdown()
+
+
+def test_recurrent_family_declines_and_falls_back():
+    """Families without destructively-rollbackable state don't implement
+    the contract; asking for speculation must quietly fall back to plain
+    decode, not fail."""
+    cfg = get_smoke_config("xlstm-125m").replace(vocab_size=300,
+                                                 vocab_pad_to=64)
+    eng = ServingEngine(cfg, max_seq=96, speculative="ngram")
+    ref = eng.generate("recurrent fallback", max_new_tokens=6).tokens
+    cb = ContinuousBatcher(eng, slots=2, max_seq=96, page=16, prefix_pages=24)
+    assert not cb.spec and cb.spec_mode == "off"
+    assert run_one(cb, eng, "recurrent fallback", max_new=6) == ref
+    eng.shutdown()
+
+
+def test_model_drafter_requires_shared_vocab():
+    big = get_smoke_config("minitron-8b").replace(vocab_size=300,
+                                                  vocab_pad_to=64)
+    other = get_smoke_config("gemma-7b").replace(vocab_size=320,
+                                                 vocab_pad_to=64)
+    with pytest.raises(AssertionError):
+        ServingEngine(big, max_seq=96, drafter_cfg=other)
+
+
+# -------------------------------------------------- model-layer contract
+@pytest.fixture(scope="module", params=FAMILIES)
+def model(request):
+    cfg = get_smoke_config(request.param).replace(vocab_size=300,
+                                                  vocab_pad_to=64)
+    m = build_model(cfg)
+    import jax
+    p = m.init(jax.random.PRNGKey(0))
+    return request.param, cfg, m, p
+
+
+def test_verify_chunk_bitwise_equals_prefill_chunk(model):
+    """THE contract: verify_chunk reuses the chunked-prefill machinery,
+    so scoring a window from a given cache is BITWISE the same compute
+    as prefilling it — the last-position logits must be identical, and
+    pos must be left for the caller to advance."""
+    arch, cfg, m, p = model
+    rng = np.random.RandomState(1)
+    ids = rng.randint(0, 300, size=24).tolist()
+    win = rng.randint(0, 300, size=5).tolist()
+    c1 = m.init_cache(1, 96)
+    _, c1 = m.prefill_chunk(p, jnp.asarray([ids], jnp.int32), c1)
+    vlog, c2 = m.verify_chunk(p, jnp.asarray([win], jnp.int32), dict(c1))
+    assert vlog.shape == (1, 5, cfg.padded_vocab)
+    assert int(c2["pos"]) == len(ids)        # caller advances pos
+    plog, _ = m.prefill_chunk(p, jnp.asarray([win], jnp.int32), dict(c1))
+    assert np.array_equal(np.asarray(vlog[:, -1]), np.asarray(plog))
+
+
+def test_verify_chunk_matches_sequential_decode(model):
+    """All W positions of one fused verify == W sequential decode_steps
+    feeding the same tokens (tolerance: bf16 accumulation-order only)."""
+    arch, cfg, m, p = model
+    rng = np.random.RandomState(2)
+    ids = rng.randint(0, 300, size=24).tolist()
+    win = rng.randint(0, 300, size=5).tolist()
+    c1 = m.init_cache(1, 96)
+    _, c1 = m.prefill_chunk(p, jnp.asarray([ids], jnp.int32), c1)
+    vlog, _ = m.verify_chunk(p, jnp.asarray([win], jnp.int32), dict(c1))
+    c = dict(c1)
+    tok = jnp.asarray([[win[0]]], jnp.int32)
+    seq = []
+    for t in win[1:] + [0]:
+        lgd, c = m.decode_step(p, tok, c)
+        seq.append(np.asarray(lgd))
+        tok = jnp.asarray([[t]], jnp.int32)
+    seq = np.stack(seq, 1)[:, :5]
+    np.testing.assert_allclose(seq, np.asarray(vlog), atol=2e-2, rtol=2e-2)
+
+
+def test_verify_chunk_vector_positions(model):
+    """Per-slot (B,) position vectors — the mixed-batch case — must
+    score each lane exactly as a scalar-pos batch=1 verify would."""
+    arch, cfg, m, p = model
+    from repro.models.common import cache_layout
+    from repro.serving.pagepool import SlotSplicer
+    rng = np.random.RandomState(3)
+    ids = [rng.randint(0, 300, size=n).tolist() for n in (24, 17)]
+    win = [rng.randint(0, 300, size=5).tolist() for _ in range(2)]
+    solo = []
+    for s, w in zip(ids, win):
+        c = m.init_cache(1, 96)
+        _, c = m.prefill_chunk(p, jnp.asarray([s], jnp.int32), c)
+        v, _ = m.verify_chunk(p, jnp.asarray([w], jnp.int32), c)
+        solo.append(np.asarray(v[0]))
+    cb = m.init_cache(2, 96)
+    cb["pos"] = jnp.zeros((2,), jnp.int32)
+    sp = SlotSplicer(cache_layout(m.cache_specs()))
+    for i, s in enumerate(ids):
+        one = m.init_cache(1, 96)
+        _, one = m.prefill_chunk(p, jnp.asarray([s], jnp.int32), one)
+        cb = sp(cb, one, i, 96)
+    cb["pos"] = jnp.asarray([len(s) for s in ids], jnp.int32)
+    vb, _ = m.verify_chunk(p, jnp.asarray(win, jnp.int32), cb)
+    for i in range(2):
+        np.testing.assert_allclose(np.asarray(vb[i]), solo[i],
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_propose_k_greedy_chain():
+    """Drafts == the eager greedy chain (dense family; MLA's random-init
+    smoke logits hit exact bf16 argmax ties whose resolution differs
+    between eager and scanned compilations — harmless, ties only affect
+    acceptance rate — so the eager comparison is only stable here).
+    pos advances k+1: the cache also covers the k-th draft."""
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300,
+                                                  vocab_pad_to=64)
+    import jax
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(4)
+    ids = rng.randint(0, 300, size=24).tolist()
+    c1 = m.init_cache(1, 96)
+    _, c1 = m.prefill_chunk(p, jnp.asarray([ids], jnp.int32), c1)
+    t0 = int(rng.randint(0, 300))
+    drafts, c2 = m.propose_k(p, jnp.asarray([[t0]], jnp.int32), dict(c1), 4)
+    assert int(c2["pos"]) == len(ids) + 5
+    c = dict(c1)
+    tok = jnp.asarray([[t0]], jnp.int32)
+    seq = []
+    for _ in range(4):
+        lgd, c = m.decode_step(p, tok, c)
+        lgd = jnp.where(jnp.arange(lgd.shape[-1]) < 300, lgd, -1e30)
+        tok = jnp.argmax(lgd, -1).astype(jnp.int32)[:, None]
+        seq.append(int(tok[0, 0]))
+    assert np.asarray(drafts)[0].tolist() == seq
+
+
+def test_recurrent_models_do_not_implement_contract():
+    for arch in ("xlstm-125m", "zamba2-7b"):
+        cfg = get_smoke_config(arch).replace(vocab_size=300, vocab_pad_to=64)
+        m = build_model(cfg)
+        assert not hasattr(m, "verify_chunk")
+        assert not hasattr(m, "propose_k")
+
+
+# ------------------------------------------------------------- ngram unit
+def test_ngram_drafter_prompt_lookup():
+    d = NgramDrafter(k=3, ngrams=(3, 2, 1))
+    ids = [5, 6, 7, 8, 9, 5, 6, 7]
+    assert d.propose(ids) == [8, 9, 5]       # longest tail n-gram match
+    assert d.propose([1, 2, 3]) == []        # no earlier occurrence
+    assert d.propose([4, 4]) == [4]          # unigram fallback

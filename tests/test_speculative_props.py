@@ -1,0 +1,126 @@
+"""Property sweeps (hypothesis) over the speculative acceptance step.
+
+``speculative_accept`` is a deterministic-stream specialization of
+rejection sampling: window position i draws the target token through
+the exact ``sample_slots`` call plain decode would make at step
+``gen+i``, and a draft is accepted iff it equals that draw. The
+distribution-preservation argument is therefore structural — every
+emitted token IS an ancestral draw from the target — and these sweeps
+pin it over random logit tensors, drafts, and k: greedy is exactly
+argmax-identical, seeded draws replay ``sample_slots`` step by step,
+the unseeded path's marginals match the target softmax within
+tolerance, and acceptance counts the exact-match prefix. This module
+skips cleanly where hypothesis isn't installed (it IS in CI's deps);
+deterministic end-to-end identity lives in test_speculative.py."""
+
+import numpy as np
+import pytest
+
+# Same environmental skip as test_kernels_props.py: the dev container
+# bakes only the jax toolchain, CI installs hypothesis explicitly.
+pytest.importorskip("hypothesis",
+                    reason="speculative property sweeps need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.sampler import (SamplerConfig, sample_slots,
+                                   speculative_accept)
+
+SETTINGS = dict(max_examples=8, deadline=None)
+V = 40
+
+
+def accept(logits, drafts, draft_len, rng, sc, temps, top_ps, seeds, steps):
+    B = logits.shape[0]
+    arr = lambda x, dt: jnp.asarray(np.broadcast_to(x, (B,)), dt)
+    return speculative_accept(
+        jnp.asarray(logits), jnp.asarray(drafts, jnp.int32),
+        arr(draft_len, jnp.int32), rng, sc, arr(temps, jnp.float32),
+        arr(top_ps, jnp.float32), arr(seeds, jnp.int32),
+        arr(steps, jnp.int32))
+
+
+@settings(**SETTINGS)
+@given(B=st.sampled_from([1, 3]), k=st.sampled_from([1, 3, 5]),
+       seed=st.integers(0, 2**16))
+def test_greedy_is_exactly_argmax(B, k, seed):
+    """temp=0: every window position's target draw is the argmax of its
+    logits — bitwise, no tolerance."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(B, k + 1, V)).astype(np.float32)
+    drafts = rng.integers(0, V, size=(B, k))
+    g, n_acc = accept(logits, drafts, k, jax.random.PRNGKey(seed),
+                      SamplerConfig(vocab_size=V), 0.0, 1.0, -1, 0)
+    assert np.array_equal(np.asarray(g), logits.argmax(-1))
+
+
+@settings(**SETTINGS)
+@given(B=st.sampled_from([1, 3]), k=st.sampled_from([1, 3, 5]),
+       seed=st.integers(0, 2**16), gen=st.integers(0, 50))
+def test_seeded_draws_replay_plain_stream(B, k, seed, gen):
+    """Seeded slots: window position i must consume exactly the
+    (seed, gen+i) stream draw plain decode would — the property that
+    makes speculative output token-identical under sampling."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(B, k + 1, V)).astype(np.float32) * 3
+    drafts = rng.integers(0, V, size=(B, k))
+    sc = SamplerConfig(vocab_size=V)
+    key = jax.random.PRNGKey(seed + 1)
+    g, _ = accept(logits, drafts, k, key, sc, 0.9, 0.95, seed, gen)
+    B_ = logits.shape[0]
+    for i in range(k + 1):
+        expect = sample_slots(
+            jnp.asarray(logits[:, i]), jax.random.fold_in(key, i), sc,
+            jnp.full((B_,), 0.9, jnp.float32),
+            jnp.full((B_,), 0.95, jnp.float32),
+            jnp.full((B_,), seed, jnp.int32),
+            jnp.full((B_,), gen + i, jnp.int32))
+        assert np.array_equal(np.asarray(g)[:, i], np.asarray(expect))
+
+
+@settings(**SETTINGS)
+@given(k=st.sampled_from([2, 4]), seed=st.integers(0, 2**16))
+def test_acceptance_counts_exact_match_prefix(k, seed):
+    """n_acc == length of the longest prefix where draft i equals the
+    target draw i-1, clipped to draft_len — mid-window rejection,
+    0-length drafts, and full acceptance all fall out."""
+    rng = np.random.default_rng(seed)
+    B = 4
+    logits = rng.normal(size=(B, k + 1, V)).astype(np.float32)
+    g_ref = logits.argmax(-1)
+    drafts = g_ref[:, :-1].copy()            # perfect replay...
+    drafts[1, 0] = (drafts[1, 0] + 1) % V    # ...reject at position 0
+    if k > 1:
+        drafts[2, 1] = (drafts[2, 1] + 1) % V  # ...mid-window rejection
+    lens = np.array([k, k, k, 0], np.int32)
+    g, n_acc = accept(logits, drafts, lens, jax.random.PRNGKey(seed),
+                      SamplerConfig(vocab_size=V), 0.0, 1.0, -1, 0)
+    n_acc = np.asarray(n_acc)
+    assert n_acc[0] == k                     # full acceptance
+    assert n_acc[1] == 0                     # first-position rejection
+    if k > 1:
+        assert n_acc[2] == 1                 # accepted prefix length
+    assert n_acc[3] == 0                     # nothing drafted
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**10), temp=st.sampled_from([0.7, 1.0]))
+def test_unseeded_marginals_match_target_softmax(seed, temp):
+    """Distribution preservation, empirically: over many shared-rng
+    keys, the first emitted token's frequencies match the target's
+    tempered softmax within tolerance — drafts (accepted or not) never
+    tilt the emitted distribution."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(1, 3, 8)).astype(np.float32)
+    drafts = rng.integers(0, 8, size=(1, 2))
+    sc = SamplerConfig(vocab_size=8)
+    n = 3000
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    draw = jax.jit(lambda kk: accept(logits, drafts, 2, kk, sc, temp,
+                                     1.0, -1, 0)[0][0, 0])
+    toks = np.asarray(jax.vmap(draw)(keys))
+    freq = np.bincount(toks, minlength=8) / n
+    target = jax.nn.softmax(jnp.asarray(logits[0, 0]) / temp)
+    np.testing.assert_allclose(freq, np.asarray(target), atol=0.04)
