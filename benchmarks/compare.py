@@ -39,6 +39,8 @@ DIRECTIONS = {
     "bytes_copied_per_admission": "lower",
     "spec_decode_speedup": "higher",
     "spec_acceptance_rate": "higher",
+    "longcontext_tok_s_flatness": "higher",
+    "longcontext_occupancy_ratio": "lower",
 }
 
 EPS = 1e-9

@@ -1,0 +1,166 @@
+"""Long-context serving under the rolling-window policy: decode a
+conversation many times longer than the mapped window and check that
+NOTHING grows — not the decode rate, not the pool footprint — while
+retrieval over the rolled-out history still works through the summary.
+
+The session runs under ``WindowPolicy(sink_pages=1, window_pages=2)``
+(a 64-token cap at page 16) and decodes to ``total_tokens`` — 16x the
+window in the CI configuration. Needle facts ("the code for X is N")
+are planted in the prompt so they land in pages the window rolls out.
+
+Three properties, two gated (see benchmarks/compare.py):
+
+* ``longcontext_tok_s_flatness`` (higher) — last-quarter decode tok/s
+  over first-quarter. Append-only attention decays with position; the
+  rolling window holds kv_len flat, so the ratio should sit near 1.0.
+* ``longcontext_occupancy_ratio`` (lower) — pool high-water pages over
+  the pages a full-context session would pin (``total/page``). The
+  policy cap is constant, so this ratio shrinks as sessions lengthen.
+* retrieval parity, asserted in-run: the sink pages + folded summary
+  spans + live window reconstruct the rolled history byte-exactly
+  (spans at or under the summarizer budget fold losslessly), so every
+  needle the full-context oracle can find is found without it.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_smoke_config
+from repro.serving import (ContinuousBatcher, Request, ServingEngine,
+                           WindowPolicy)
+
+POLICY = WindowPolicy(sink_pages=1, window_pages=2, roll_pages=1)
+
+NEEDLES = [
+    "the code for osaka is 7425.",
+    "the code for quito is 1938.",
+    "the code for lagos is 5067.",
+]
+
+
+def _prompt() -> str:
+    """Needles spread through enough filler that each lands past the
+    sink page — in territory the window will roll out."""
+    filler = "conversation filler text that keeps flowing along. "
+    parts = []
+    for n in NEEDLES:
+        parts.append(filler)
+        parts.append(n + " ")
+    parts.append(filler)
+    return "".join(parts)
+
+
+def run(total_tokens: int = 1024, quiet: bool = False) -> dict:
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300,
+                                                  vocab_pad_to=64)
+    engine = ServingEngine(cfg, max_seq=96, window_policy=POLICY)
+    engine.warmup()
+    cb = ContinuousBatcher(engine, slots=1, max_seq=96, prefix_pages=64)
+    assert cb.window is POLICY, "policy must be active on the paged path"
+    page, cap = cb.page, POLICY.cap_pages
+
+    tk = engine.tokenizer
+    prompt_ids = tk.encode(_prompt())
+    decode_tokens = total_tokens - len(prompt_ids)
+    assert decode_tokens > 0, "total_tokens must exceed the prompt"
+
+    # jit warmup THROUGH a few rolls: the roll path compiles its own
+    # re-rotation dispatches, which would otherwise land in (and sink)
+    # the measured first quarter
+    warm = Request(rid="warm", prompt_ids=prompt_ids,
+                   max_new_tokens=cap * page)
+    cb.submit(warm)
+    cb.run_until_drained()
+    assert warm._rolls > 0
+    sink0 = engine.span_summarizer
+    sink0.flush(timeout=60.0)
+    sink0.drop("warm")
+
+    stamps: list = []
+    req = Request(rid="lc", prompt_ids=prompt_ids,
+                  max_new_tokens=decode_tokens,
+                  on_token=lambda t, s: stamps.append(time.perf_counter()))
+    cb.submit(req)
+    cb.run_until_drained()
+    assert len(req.output_ids) == decode_tokens
+
+    # ---- flatness: decode rate by quarters (first-token anchored)
+    q = len(stamps) // 4
+    rate_first = (q - 1) / max(stamps[q - 1] - stamps[0], 1e-9)
+    rate_last = (q - 1) / max(stamps[-1] - stamps[-q], 1e-9)
+    flatness = rate_last / rate_first
+
+    # ---- occupancy: constant cap vs what full context would pin
+    st = cb.pool_stats()
+    pages_full = -(-total_tokens // page)            # ceil
+    occupancy_ratio = st.high_water / pages_full
+
+    # ---- retrieval through the summary (vs the full-context oracle)
+    sink = engine.span_summarizer
+    assert sink.flush(timeout=60.0), "span summarization never drained"
+    full = prompt_ids + req.output_ids
+    full_text = tk.decode(full)
+    rolled = sink.rolled_tokens("lc")
+    assert rolled == req._rolls * POLICY.roll_pages * page
+    lo = POLICY.sink_pages * page
+    # spans <= budget fold losslessly: the summary must hold EVERY
+    # rolled span's decode, in roll order (token-level check — decoded
+    # text itself is not concat-stable when a generated multi-byte
+    # UTF-8 sequence straddles a span boundary)
+    d = POLICY.roll_pages * page
+    expected = "\n".join(
+        line for i in range(req._rolls)
+        if (line := tk.decode(full[lo + i * d:lo + (i + 1) * d])))
+    assert sink.summary("lc") == expected, \
+        "summary diverged from the rolled spans"
+    reconstructed = (tk.decode(full[:lo])
+                     + sink.summary("lc").replace("\n", "")
+                     + tk.decode(full[lo + rolled:]))
+    oracle_hits = sum(n in full_text for n in NEEDLES)
+    summary_hits = sum(n in reconstructed for n in NEEDLES)
+    assert oracle_hits == len(NEEDLES), "needles lost from the prompt"
+    assert summary_hits == oracle_hits, \
+        "retrieval through the summary lost needles the oracle finds"
+
+    out = {
+        "total_tokens": total_tokens,
+        "window_tokens": cap * page,
+        "window_multiple": total_tokens / (cap * page),
+        "rolls": req._rolls,
+        "tok_s_first_quarter": rate_first,
+        "tok_s_last_quarter": rate_last,
+        "tok_s_flatness": flatness,
+        "high_water_pages": st.high_water,
+        "pages_full_context": pages_full,
+        "occupancy_ratio": occupancy_ratio,
+        "needle_recall": summary_hits / len(NEEDLES),
+    }
+    if not quiet:
+        print(f"\n=== long context ({total_tokens} tokens, "
+              f"{out['window_multiple']:.0f}x the {cap * page}-token window, "
+              f"{req._rolls} rolls) ===")
+        print(f"decode tok/s : {rate_first:8.1f} (first quarter) -> "
+              f"{rate_last:8.1f} (last quarter), flatness {flatness:.2f}")
+        print(f"pool pages   : {st.high_water} high-water vs {pages_full} "
+              f"full-context ({occupancy_ratio:.3f})")
+        print(f"needle recall: {summary_hits}/{len(NEEDLES)} "
+              "(parity with full context)")
+    engine.shutdown()
+    return out
+
+
+def main() -> None:
+    import sys
+    smoke = "--smoke" in sys.argv
+    r = run(total_tokens=320 if smoke else 1024)
+    if smoke:
+        assert r["rolls"] >= 4, r
+        assert r["tok_s_flatness"] > 0.5, r
+        assert r["high_water_pages"] <= POLICY.cap_pages, r
+        assert r["needle_recall"] == 1.0, r
+        print("smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,12 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
     * ``spec_decode_speedup`` / ``spec_acceptance_rate`` — fused
       speculative verify vs plain decode tok/s at a controlled 80%
       draft-agreement rate, plus the acceptance rate itself
-      (benchmarks/speculative.py; identity is asserted in-run).
+      (benchmarks/speculative.py; identity is asserted in-run);
+    * ``longcontext_tok_s_flatness`` / ``longcontext_occupancy_ratio``
+      — a 16x-window rolling session's last-quarter over first-quarter
+      decode tok/s, and its pool high-water over full-context pages
+      (benchmarks/longcontext.py; needle-retrieval parity with the
+      full-context oracle is asserted in-run).
     """
     t0 = time.perf_counter()
 
@@ -57,6 +62,9 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
     from benchmarks import speculative
     r_sp = speculative.run(tokens=96, repeats=3, quiet=True)
 
+    from benchmarks import longcontext
+    r_lc = longcontext.run(total_tokens=1024, quiet=True)
+
     metrics = {
         "bg_decode_retention": r_int["retention"],
         "agg_speedup_16_sessions": r_cc["summary"]["speedup_at_max"],
@@ -66,6 +74,8 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
             r_bc["paged"]["bytes_per_admission"],
         "spec_decode_speedup": r_sp["speedup"],
         "spec_acceptance_rate": r_sp["acceptance_rate"],
+        "longcontext_tok_s_flatness": r_lc["tok_s_flatness"],
+        "longcontext_occupancy_ratio": r_lc["occupancy_ratio"],
     }
     out = {
         "metrics": metrics,
@@ -78,6 +88,9 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
             "spec_plain_tok_s": r_sp["plain_tok_s"],
             "spec_tok_s": r_sp["spec_tok_s"],
             "spec_tokens_per_tick": r_sp["tokens_per_tick"],
+            "longcontext_rolls": r_lc["rolls"],
+            "longcontext_needle_recall": r_lc["needle_recall"],
+            "longcontext_high_water_pages": r_lc["high_water_pages"],
         },
         "wall_s": round(time.perf_counter() - t0, 1),
     }

@@ -363,6 +363,16 @@ class StreamGateway:
                    "x-stream-fallback-depth": str(attempt["depth"]),
                    "x-stream-cache":
                        f"hit={int(cache_meta.get('prefix_hit_tokens', 0))}"}
+        if "pool_occupancy" in cache_meta:
+            # KV pool pressure at first token (paged serving tiers):
+            # used/high-water/capacity in pages. Flat high-water across
+            # long sessions is the rolling-window bounded-memory signal.
+            headers["x-stream-pool-occupancy"] = \
+                str(int(cache_meta["pool_occupancy"]))
+            headers["x-stream-pool-high-water"] = \
+                str(int(cache_meta.get("pool_high_water", 0)))
+            headers["x-stream-pool-capacity"] = \
+                str(int(cache_meta.get("pool_capacity", 0)))
         return GatewayResponse(
             status=200, headers=headers,
             stream=self._sse_events(rid, model, q, box, cancel_event,

@@ -33,6 +33,9 @@ the byte-count heuristic, which overcounts by one per message.
 
 from __future__ import annotations
 
+import queue
+import threading
+import time as _time
 from dataclasses import dataclass
 
 
@@ -166,3 +169,102 @@ class TierAwareSummarizer:
         pol = self.policies[tier]
         return (conversation_tokens(messages, self.tokenizer)
                 + pol.response_headroom <= pol.context_window)
+
+
+class SpanSummarizer:
+    """Async span summarization for rolling-window serving.
+
+    When a decode slot's rolling window evicts its oldest non-sink pages
+    (:class:`repro.serving.scheduler.WindowPolicy`), the scheduler hands
+    the evicted span's token ids here and keeps decoding; a single
+    worker thread decodes and folds each span into the session's
+    **pinned, append-only summary block** — pinned in that it is never
+    rolled or evicted for the session's life, append-only so earlier
+    summary text never changes once written (the same prefix-stability
+    contract as :class:`TierAwareSummarizer`).
+
+    ``submit`` is called on the scheduler thread and must never block:
+    it only enqueues. One global FIFO queue drained by one worker gives
+    per-session ordering for free — a session that rolls twice before
+    its first span is summarized has the second span *queued behind* the
+    first, never dropped or reordered. Folding is the repo's
+    deterministic extractive stand-in: the span text head-clipped to
+    ``span_budget`` tokens (a span at or under the budget folds in
+    losslessly), one line per span.
+    """
+
+    def __init__(self, tokenizer=None, *, span_budget: int = 160):
+        self.tokenizer = tokenizer
+        self.span_budget = span_budget
+        self.spans_in = 0            # spans enqueued (scheduler thread)
+        self.spans_done = 0          # spans folded (worker thread)
+        self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._lines: dict = {}       # rid -> [line, ...] (append-only)
+        self._rolled: dict = {}      # rid -> rolled-out token count
+        self._thread: threading.Thread | None = None
+
+    # ---------------------------------------------------------- producer
+    def submit(self, rid: str, span_ids: list):
+        """Enqueue one rolled-out span (scheduler thread; non-blocking).
+        Empty spans are acknowledged and skipped."""
+        if not span_ids:
+            return
+        with self._lock:
+            self.spans_in += 1
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, daemon=True, name="span-summarizer")
+                self._thread.start()
+        self._q.put((rid, list(span_ids)))
+
+    # ---------------------------------------------------------- worker
+    def _loop(self):
+        while True:
+            rid, ids = self._q.get()
+            try:
+                if self.tokenizer is not None:
+                    text = self.tokenizer.decode(ids)
+                else:
+                    text = " ".join(str(i) for i in ids)
+                line = _clip_to_tokens(text, self.span_budget, self.tokenizer)
+            except Exception:
+                line = ""            # a bad span must not kill the worker
+            with self._lock:
+                if line:
+                    self._lines.setdefault(rid, []).append(line)
+                self._rolled[rid] = self._rolled.get(rid, 0) + len(ids)
+                self.spans_done += 1
+                self._idle.notify_all()
+
+    # ---------------------------------------------------------- readers
+    def summary(self, rid: str) -> str:
+        """The session's summary block so far — one line per folded
+        span, oldest first. Always a byte prefix of every later call for
+        the same session (append-only)."""
+        with self._lock:
+            return "\n".join(self._lines.get(rid, []))
+
+    def rolled_tokens(self, rid: str) -> int:
+        with self._lock:
+            return self._rolled.get(rid, 0)
+
+    def flush(self, timeout: float = 10.0) -> bool:
+        """Block until every submitted span has been folded (tests and
+        benchmarks synchronize on the async path here). Returns False on
+        timeout."""
+        deadline = _time.monotonic() + timeout
+        with self._lock:
+            while self.spans_done < self.spans_in:
+                left = deadline - _time.monotonic()
+                if left <= 0:
+                    return False
+                self._idle.wait(left)
+        return True
+
+    def drop(self, rid: str):
+        """Forget one session's summary state."""
+        with self._lock:
+            self._lines.pop(rid, None)
+            self._rolled.pop(rid, None)

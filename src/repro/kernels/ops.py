@@ -81,19 +81,25 @@ def decode_attention(q, k, v, *, kv_len, scale=None, logit_soft_cap=0.0,
 
 
 def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
-                    logit_soft_cap=0.0, impl="ref", interpret=False):
+                    logit_soft_cap=0.0, impl="ref", interpret=False,
+                    pos_offset=None):
     """Paged decode attention: q (B,Hq,1,D) against pooled KV pages
     (P,Hkv,page,D) addressed through per-slot block tables (B,n_pages).
     The ref path gathers the pages into a contiguous view; the Pallas
-    path DMAs pages inside the kernel via scalar-prefetched tables."""
+    path DMAs pages inside the kernel via scalar-prefetched tables.
+    ``pos_offset`` (scalar or (B,)) is the per-slot count of tokens
+    rolled out of the window: the block table maps only surviving
+    pages, so the slot-space KV length is kv_len - pos_offset."""
     if _resolve(impl) == "ref":
         return _ref.paged_attention(q, k_pages, v_pages,
                                     block_tables=block_tables, kv_len=kv_len,
-                                    scale=scale, logit_soft_cap=logit_soft_cap)
+                                    scale=scale, logit_soft_cap=logit_soft_cap,
+                                    pos_offset=pos_offset)
     from repro.kernels import paged_attention as _k
     return _k.paged_attention(q, k_pages, v_pages, block_tables=block_tables,
                               kv_len=kv_len, scale=scale,
-                              logit_soft_cap=logit_soft_cap, interpret=interpret)
+                              logit_soft_cap=logit_soft_cap, interpret=interpret,
+                              pos_offset=pos_offset)
 
 
 def gather_kv_pages(pages, block_tables):

@@ -29,7 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+def _paged_kernel(bt_ref, kvlen_ref, posoff_ref, q_ref, k_ref, v_ref, o_ref,
                   acc_ref, m_ref, l_ref, *, scale, page, n_kv_heads, soft_cap):
     bh = pl.program_id(0)
     ip = pl.program_id(1)
@@ -41,7 +41,12 @@ def _paged_kernel(bt_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    kv_len = kvlen_ref[bh // n_kv_heads]
+    # pos_offset = tokens rolled out of the slot's window; the block
+    # table maps only the surviving pages, so the slot-space KV length
+    # is the absolute length minus the offset and rolled-out pages are
+    # skipped by the same masked-page path as unwritten ones.
+    b = bh // n_kv_heads
+    kv_len = kvlen_ref[b] - posoff_ref[b]
     k_start = ip * page
 
     @pl.when(k_start < kv_len)
@@ -72,9 +77,10 @@ def _paged_kernel(bt_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
-                    logit_soft_cap=0.0, interpret=False):
+                    logit_soft_cap=0.0, interpret=False, pos_offset=None):
     """q (B,Hq,1,D); k_pages,v_pages (P,Hkv,page,D);
-    block_tables (B,n_pages) int32; kv_len scalar or (B,)
+    block_tables (B,n_pages) int32; kv_len scalar or (B,);
+    pos_offset optional scalar or (B,) rolled-out token counts
     -> (B,Hq,1,D)."""
     B, Hq, _, D = q.shape
     P, Hkv, page, _ = k_pages.shape
@@ -83,20 +89,24 @@ def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
 
     kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    if pos_offset is None:
+        pos_offset = jnp.zeros((B,), jnp.int32)
+    pos_offset = jnp.broadcast_to(
+        jnp.asarray(pos_offset, jnp.int32).reshape(-1), (B,))
     bt = jnp.asarray(block_tables, jnp.int32).reshape(-1)   # (B*n_pages,)
     qf = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
 
-    def q_map(bh, ip, bt_ref, kvlen_ref):
+    def q_map(bh, ip, bt_ref, kvlen_ref, posoff_ref):
         return (bh, 0, 0)
 
-    def kv_map(bh, ip, bt_ref, kvlen_ref):
+    def kv_map(bh, ip, bt_ref, kvlen_ref, posoff_ref):
         pid = bt_ref[(bh // Hkv) * n_pages + ip]
         return (pid, bh % Hkv, 0, 0)
 
     kernel = functools.partial(_paged_kernel, scale=scale, page=page,
                                n_kv_heads=Hkv, soft_cap=logit_soft_cap)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B * Hkv, n_pages),
         in_specs=[
             pl.BlockSpec((1, G, D), q_map),
@@ -115,5 +125,5 @@ def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
         interpret=interpret,
-    )(bt, kv_len, qf, k_pages, v_pages)
+    )(bt, kv_len, pos_offset, qf, k_pages, v_pages)
     return out.reshape(B, Hq, D)[:, :, None, :]

@@ -105,7 +105,7 @@ def gather_kv_pages(pages, block_tables):
 
 
 def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
-                    logit_soft_cap: float = 0.0):
+                    logit_soft_cap: float = 0.0, pos_offset=None):
     """Paged decode attention, pure-jnp oracle: gather the block-table
     row into a contiguous (B, Hkv, S, D) view, then run the standard
     decode attention. The Pallas kernel performs the same gather
@@ -113,7 +113,13 @@ def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
 
     q: (B, Hq, 1, D); k_pages, v_pages: (P, Hkv, page, D);
     block_tables: (B, n_pages); kv_len: scalar or (B,).
+    pos_offset: optional scalar or (B,) — tokens rolled out of the
+    slot's window. The block table holds only the surviving pages, so
+    the slot-space KV length is ``kv_len - pos_offset``.
     """
+    kv_len = jnp.asarray(kv_len)
+    if pos_offset is not None:
+        kv_len = kv_len - jnp.asarray(pos_offset)
     k = gather_kv_pages(k_pages, block_tables).astype(q.dtype)
     v = gather_kv_pages(v_pages, block_tables).astype(q.dtype)
     return decode_attention(q, k, v, kv_len=kv_len, scale=scale,

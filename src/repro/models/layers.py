@@ -109,6 +109,24 @@ def apply_rope(x, cos, sin):
     return out.astype(x.dtype)
 
 
+def rope_shift(x, delta, theta: float):
+    """Re-rotate already-roped keys by ``delta`` positions (StreamingLLM
+    pos_shift). Rope is a per-pair rotation, so rotating keys roped at
+    position p by ``delta`` yields exactly the keys a fresh rope at
+    p + delta would produce — a window roll moves surviving keys toward
+    position 0 with ``delta = -rolled_tokens`` and never recomputes K.
+
+    x: (..., D) roped keys, any leading dims; delta: scalar (may be a
+    traced jnp scalar). Exact for delta == 0 only up to float rounding,
+    so callers skip the call entirely when nothing rolled.
+    """
+    D = x.shape[-1]
+    cos, sin = rope_freqs(jnp.asarray(delta), D, theta)   # (D/2,)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
 def _split_heads(x, n_heads, head_dim):
     B, S, _ = x.shape
     return x.reshape(B, S, n_heads, head_dim).transpose(0, 2, 1, 3)
@@ -133,7 +151,7 @@ def update_cache_at(buf, new, idx, axis: int):
 
 def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
               kv_len=None, context=None, logit_soft_cap=0.0, chunked=False,
-              block_tables=None):
+              block_tables=None, pos_offset=None):
     """GQA attention. Four modes:
 
       * full/prefill:  cache is None        -> causal self-attention; if
@@ -156,6 +174,14 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
     decode attends via ops.paged_attention (in-kernel gather on the
     Pallas path). Position 0 of an all-zero table row resolves to the
     pool's reserved trash page, so masked slots write harmlessly.
+
+    ``pos_offset`` (paged mode only; scalar or (B,)) is the per-slot
+    count of tokens rolled out of a sliding window: ``cache_index``
+    stays absolute but the block table maps only slot-space positions
+    (cache_index - pos_offset), so writes address slot space and the
+    paged-attention kernel subtracts the offset from ``kv_len``.
+    ``positions`` must already be slot-relative for rope (the caller's
+    pos_shift).
     """
     B, S, _ = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -182,33 +208,44 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
         page = ck.shape[2]
         if S == 1:  # paged decode: scatter to (page id, offset) per slot
             pos = jnp.asarray(cache_index).reshape(-1)            # (B,)
-            pid = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+            poff = (jnp.zeros_like(pos) if pos_offset is None else
+                    jnp.broadcast_to(jnp.asarray(pos_offset, pos.dtype)
+                                     .reshape(-1), pos.shape))
+            spos = pos - poff                  # slot-space write position
+            pid = jnp.take_along_axis(block_tables, (spos // page)[:, None],
                                       axis=1)[:, 0]
-            off = pos % page
+            off = spos % page
             ck = ck.at[pid, :, off, :].set(k[:, :, 0, :].astype(ck.dtype))
             cv = cv.at[pid, :, off, :].set(v[:, :, 0, :].astype(cv.dtype))
             new_cache = (ck, cv)
             out = ops.paged_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
                                       block_tables=block_tables,
-                                      kv_len=pos + 1, impl=impl,
+                                      kv_len=pos + 1, pos_offset=poff,
+                                      impl=impl,
                                       logit_soft_cap=logit_soft_cap)
         elif jnp.ndim(cache_index) == 0:
             # paged chunked prefill: chunk_plan keeps chunks in one page
             assert chunked and B == 1
-            pid = block_tables[0, cache_index // page]
+            si = (cache_index if pos_offset is None
+                  else cache_index - jnp.asarray(pos_offset).reshape(()))
+            pid = block_tables[0, si // page]
             ck = jax.lax.dynamic_update_slice(
-                ck, k.astype(ck.dtype), (pid, 0, cache_index % page, 0))
+                ck, k.astype(ck.dtype), (pid, 0, si % page, 0))
             cv = jax.lax.dynamic_update_slice(
-                cv, v.astype(cv.dtype), (pid, 0, cache_index % page, 0))
+                cv, v.astype(cv.dtype), (pid, 0, si % page, 0))
             new_cache = (ck, cv)
             gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
             gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
-            out = ops.chunk_attention(q, gk, gv, q_offset=cache_index,
-                                      kv_len=cache_index + S, impl=impl,
+            out = ops.chunk_attention(q, gk, gv, q_offset=si,
+                                      kv_len=si + S, impl=impl,
                                       logit_soft_cap=logit_soft_cap)
         else:  # paged verify window: per-token scatter at per-slot positions
             pos = jnp.asarray(cache_index)                        # (B,)
-            pos2d = pos[:, None] + jnp.arange(S)[None, :]         # (B, S)
+            poff = (jnp.zeros_like(pos) if pos_offset is None else
+                    jnp.broadcast_to(jnp.asarray(pos_offset, pos.dtype)
+                                     .reshape(-1), pos.shape))
+            spos = pos - poff
+            pos2d = spos[:, None] + jnp.arange(S)[None, :]        # (B, S)
             npg = block_tables.shape[1]
             # positions past the slot's mapped span land on the trash page
             # (the scheduler guards this; the clamp keeps a stray window
@@ -224,8 +261,8 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
             new_cache = (ck, cv)
             gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
             gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
-            out = ops.chunk_attention(q, gk, gv, q_offset=pos,
-                                      kv_len=pos + S, impl=impl,
+            out = ops.chunk_attention(q, gk, gv, q_offset=spos,
+                                      kv_len=spos + S, impl=impl,
                                       logit_soft_cap=logit_soft_cap)
     elif cache is not None:
         ck, cv = cache

@@ -82,16 +82,18 @@ class TransformerLM:
 
     # ------------------------------------------------------------------ blocks
     def _attn(self, x, bp, *, positions, cache=None, cache_index=None,
-              chunked=False, block_tables=None):
+              chunked=False, block_tables=None, pos_offset=None):
         cfg = self.cfg
         if cfg.use_mla:
             return mla_mod.mla_attention(x, bp, cfg, positions=positions,
                                          cache=cache, cache_index=cache_index,
                                          absorbed=self.mla_absorbed, chunked=chunked,
-                                         block_tables=block_tables)
+                                         block_tables=block_tables,
+                                         pos_offset=pos_offset)
         return layers.attention(x, bp, cfg, positions=positions,
                                 cache=cache, cache_index=cache_index,
-                                chunked=chunked, block_tables=block_tables)
+                                chunked=chunked, block_tables=block_tables,
+                                pos_offset=pos_offset)
 
     def _mlp(self, x, bp, moe_block: bool, is_eval: bool):
         cfg = self.cfg
@@ -101,7 +103,8 @@ class TransformerLM:
         return layers.mlp(x, bp, cfg)
 
     def _block(self, x, bp, *, positions, cache=None, cache_index=None,
-               moe_block=True, is_eval=False, chunked=False, block_tables=None):
+               moe_block=True, is_eval=False, chunked=False, block_tables=None,
+               pos_offset=None):
         cfg = self.cfg
         h = layers.rmsnorm(x, bp["ln1"], cfg)
         if cache is None:
@@ -110,7 +113,8 @@ class TransformerLM:
         else:
             a, new_cache = self._attn(h, bp["attn"], positions=positions,
                                       cache=cache, cache_index=cache_index,
-                                      chunked=chunked, block_tables=block_tables)
+                                      chunked=chunked, block_tables=block_tables,
+                                      pos_offset=pos_offset)
         x = x + a
         x = x + self._mlp(layers.rmsnorm(x, bp["ln2"], cfg), bp["mlp"], moe_block,
                           is_eval or cache is not None)
@@ -257,14 +261,20 @@ class TransformerLM:
         every = cfg.cross_attn_every
         cross_kv = (cache.get("cross_k"), cache.get("cross_v")) if self.has_cross else None
         # paged serving mode: cache leaves are pool pages addressed
-        # through per-slot block tables (carried through unchanged)
+        # through per-slot block tables (carried through unchanged).
+        # ``pos_offset`` (rolling-window mode) is the per-slot count of
+        # tokens rolled out of the window: write addressing and attention
+        # masks run in slot space (pos - pos_offset) while "pos" stays
+        # absolute.
         bt = cache.get("block_tables")
+        poff = cache.get("pos_offset")
 
         for i in range(cfg.first_dense_layers):
             x, val = self._block(x, params[f"dense{i}"], positions=positions,
                                  cache=self._dense_cache(cache, i),
                                  cache_index=cache_index, moe_block=False,
-                                 chunked=chunked, block_tables=bt)
+                                 chunked=chunked, block_tables=bt,
+                                 pos_offset=poff)
             new_cache = self._store_dense(new_cache, i, val)
 
         if cfg.use_mla:
@@ -278,7 +288,7 @@ class TransformerLM:
             bp, idx, lc = inp
             x, nc = self._block(x, bp, positions=positions, cache=lc,
                                 cache_index=cache_index, chunked=chunked,
-                                block_tables=bt)
+                                block_tables=bt, pos_offset=poff)
             if cross_kv is not None and cross_kv[0] is not None:
                 def do_cross(x):
                     inv = idx // every
@@ -324,8 +334,10 @@ class TransformerLM:
         cfg = self.cfg
         B, T = tokens.shape
         start = cache["pos"]
+        sstart = (start - jnp.asarray(cache["pos_offset"]).reshape(())
+                  if "pos_offset" in cache else start)
         x = layers.embed(tokens, params["embed"], cfg)
-        positions = start + jnp.arange(T)
+        positions = sstart + jnp.arange(T)
         context = self._vision_context(params, (extra or {}).get("vision"))
         if self.has_cross and context is not None:
             ck, cv = self._cross_kv_all(params, context)
@@ -359,9 +371,10 @@ class TransformerLM:
         cfg = self.cfg
         B, T = tokens.shape
         start = cache["pos"]
+        sstart = start - cache["pos_offset"] if "pos_offset" in cache else start
         x = layers.embed(tokens, params["embed"], cfg)
-        positions = (start + jnp.arange(T) if jnp.ndim(start) == 0
-                     else start[:, None] + jnp.arange(T)[None, :])
+        positions = (sstart + jnp.arange(T) if jnp.ndim(sstart) == 0
+                     else sstart[:, None] + jnp.arange(T)[None, :])
         x, new_cache = self._run_cached(params, x, positions, cache,
                                         cache_index=start, chunked=True)
         x = layers.rmsnorm(x, params["ln_f"], cfg)
@@ -405,7 +418,11 @@ class TransformerLM:
         cfg = self.cfg
         pos = cache["pos"]
         x = layers.embed(token, params["embed"], cfg)
-        positions = pos[None] if pos.ndim == 0 else pos[:, None]
+        # rotary positions are slot-relative: after a window roll the
+        # cached keys keep their slot-space rotation (pos_shift), so the
+        # query must be roped at pos - pos_offset, not the absolute pos
+        spos = pos - cache["pos_offset"] if "pos_offset" in cache else pos
+        positions = spos[None] if spos.ndim == 0 else spos[:, None]
         x, new_cache = self._run_cached(params, x, positions, cache, cache_index=pos)
         x = layers.rmsnorm(x, params["ln_f"], cfg)
         head = params["embed"] if cfg.tie_embeddings else params["lm_head"]

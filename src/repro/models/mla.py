@@ -49,7 +49,7 @@ def _norm(x, w, eps):
 
 def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None,
                   absorbed: bool = False, chunked: bool = False,
-                  block_tables=None):
+                  block_tables=None, pos_offset=None):
     """x (B, S, D). cache = (c_kv (B, Smax, r), k_rope (B, Smax, dr)) or None.
 
     ``chunked`` (S > 1, cache given): the tokens are a prompt chunk whose
@@ -62,6 +62,14 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
     gathered per-slot view. The compressed latent is tiny (r + dr per
     token), so the gather is cheap and both decode paths (absorbed and
     naive) reuse the contiguous math unchanged.
+
+    ``pos_offset`` (paged mode only; scalar or (B,)) is the per-slot
+    count of tokens rolled out of a sliding window: ``cache_index``
+    stays absolute, but writes, masks, and causal offsets run in slot
+    space (cache_index - pos_offset) since the gathered view holds only
+    surviving pages. ``positions`` must already be slot-relative (the
+    caller's pos_shift); only ``k_rope`` carries rotary state, so a roll
+    re-rotates the cached rope keys and the latent ``c_kv`` is untouched.
 
     Returns y (or (y, new_cache) when cache is given).
     """
@@ -81,29 +89,41 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
     k_rope = apply_rope((x @ p["wkr"].astype(x.dtype))[:, None], cos, sin)[:, 0]  # (B,S,dr)
 
     new_cache = None
+    q_off = cache_index                      # causal offset for chunked paths
     if cache is not None and block_tables is not None:
         cc, cr = cache                       # latent pool pages (P, page, r)
         page = cc.shape[1]
         if S == 1:  # paged decode: scatter latents to (page id, offset)
             pos = jnp.asarray(cache_index).reshape(-1)             # (B,)
-            pid = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+            poff = (jnp.zeros_like(pos) if pos_offset is None else
+                    jnp.broadcast_to(jnp.asarray(pos_offset, pos.dtype)
+                                     .reshape(-1), pos.shape))
+            spos = pos - poff                # slot-space write position
+            pid = jnp.take_along_axis(block_tables, (spos // page)[:, None],
                                       axis=1)[:, 0]
-            off = pos % page
+            off = spos % page
             cc = cc.at[pid, off, :].set(c_kv[:, 0, :].astype(cc.dtype))
             cr = cr.at[pid, off, :].set(k_rope[:, 0, :].astype(cr.dtype))
-            kv_len = pos + 1
+            kv_len = spos + 1                # gathered view is slot-space
         elif jnp.ndim(cache_index) == 0:
             # paged chunked prefill (chunk_plan keeps chunks in one page)
             assert chunked and B == 1
-            pid = block_tables[0, cache_index // page]
+            si = (cache_index if pos_offset is None
+                  else cache_index - jnp.asarray(pos_offset).reshape(()))
+            pid = block_tables[0, si // page]
             cc = jax.lax.dynamic_update_slice(
-                cc, c_kv.astype(cc.dtype), (pid, cache_index % page, 0))
+                cc, c_kv.astype(cc.dtype), (pid, si % page, 0))
             cr = jax.lax.dynamic_update_slice(
-                cr, k_rope.astype(cr.dtype), (pid, cache_index % page, 0))
-            kv_len = cache_index + S
+                cr, k_rope.astype(cr.dtype), (pid, si % page, 0))
+            kv_len = si + S
+            q_off = si
         else:  # paged verify window: per-token latent scatter, per-slot pos
             pos = jnp.asarray(cache_index)                        # (B,)
-            pos2d = pos[:, None] + jnp.arange(S)[None, :]         # (B, S)
+            poff = (jnp.zeros_like(pos) if pos_offset is None else
+                    jnp.broadcast_to(jnp.asarray(pos_offset, pos.dtype)
+                                     .reshape(-1), pos.shape))
+            spos = pos - poff
+            pos2d = spos[:, None] + jnp.arange(S)[None, :]        # (B, S)
             npg = block_tables.shape[1]
             valid = (pos2d // page) < npg   # stray positions -> trash page
             pid = jnp.take_along_axis(block_tables,
@@ -113,7 +133,8 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
             off = jnp.where(valid, pos2d % page, 0)
             cc = cc.at[pid, off, :].set(c_kv.astype(cc.dtype))
             cr = cr.at[pid, off, :].set(k_rope.astype(cr.dtype))
-            kv_len = pos + S
+            kv_len = spos + S
+            q_off = spos
         new_cache = (cc, cr)
         kv_latent = ops.gather_kv_pages(cc, block_tables).astype(x.dtype)
         k_rope_all = ops.gather_kv_pages(cr, block_tables).astype(x.dtype)
@@ -175,7 +196,7 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
                                        kv_len=kv_len, scale=scale, impl=impl)[..., :dv]
         elif cache is not None and chunked:
             out = ops.chunk_attention(q_full, k_full, _pad_v(vv, dn + dr),
-                                      q_offset=cache_index, kv_len=kv_len,
+                                      q_offset=q_off, kv_len=kv_len,
                                       scale=scale, impl=impl)[..., :dv]
         else:
             out = ops.flash_attention(q_full, k_full, _pad_v(vv, dn + dr),

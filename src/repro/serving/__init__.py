@@ -1,17 +1,17 @@
 from repro.serving.engine import ServingEngine, GenerationResult
 from repro.serving.sampler import GenerationParams, SamplerConfig
 from repro.serving.tokenizer import ByteTokenizer
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import ContinuousBatcher, Request, WindowPolicy
 from repro.serving.broker import SessionBroker, SessionHandle, SessionResult
-from repro.serving.pagepool import PagePool, SlotSplicer, chunk_plan
+from repro.serving.pagepool import PagePool, PoolStats, SlotSplicer, chunk_plan
 from repro.serving.prefix_cache import CacheStats, PrefixCache, PrefixLease
 from repro.serving.speculative import (DraftModel, ModelDrafter,
                                        NgramDrafter, SpecStats)
 
 __all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
            "GenerationParams", "SamplerConfig",
-           "ContinuousBatcher", "Request",
+           "ContinuousBatcher", "Request", "WindowPolicy",
            "SessionBroker", "SessionHandle", "SessionResult",
-           "PagePool", "SlotSplicer", "chunk_plan",
+           "PagePool", "PoolStats", "SlotSplicer", "chunk_plan",
            "CacheStats", "PrefixCache", "PrefixLease",
            "DraftModel", "ModelDrafter", "NgramDrafter", "SpecStats"]

@@ -47,6 +47,7 @@ class SessionResult:
     finish_reason: str = "stop"      # "stop" | "length" | "cancelled"
     error: Optional[str] = None
     prefix_hit_tokens: int = 0       # prompt tokens served from the KV cache
+    rolls: int = 0                   # window rolls the session took
 
 
 class SessionHandle:
@@ -117,8 +118,11 @@ class SessionBroker:
         max_new_tokens = gp.max_tokens
         tk = self.engine.tokenizer
         ids = tk.encode(prompt) if isinstance(prompt, str) else list(prompt)
-        ids, max_new_tokens = clip_prompt(ids, max_new_tokens,
-                                          self.batcher.max_seq)
+        if self.batcher.window is None:
+            # rolling-window sessions are unbounded (the window rolls);
+            # everyone else obeys the seq-axis capacity rule
+            ids, max_new_tokens = clip_prompt(ids, max_new_tokens,
+                                              self.batcher.max_seq)
         rid = rid or uuid.uuid4().hex[:12]
         handle = SessionHandle(rid, lambda: None)
         state = {"dead_cb": False}
@@ -128,8 +132,16 @@ class SessionBroker:
                 handle.ttft_s = time.perf_counter() - handle.submitted_at
                 handle.prefix_hit_tokens = req.prefix_hit_tokens
                 if on_meta is not None:
+                    meta = {"prefix_hit_tokens": req.prefix_hit_tokens}
+                    st = self.batcher.pool_stats()
+                    if st is not None:
+                        # pool pressure at first token: the gateway
+                        # forwards these as x-stream-pool-* headers
+                        meta["pool_occupancy"] = st.occupancy
+                        meta["pool_high_water"] = st.high_water
+                        meta["pool_capacity"] = st.capacity
                     try:
-                        on_meta({"prefix_hit_tokens": req.prefix_hit_tokens})
+                        on_meta(meta)
                     except Exception:
                         pass
             if on_token is not None and not state["dead_cb"]:
@@ -153,7 +165,7 @@ class SessionBroker:
                 finish_reason=r.finish_reason
                 or ("cancelled" if r.cancelled else "stop"),
                 error="callback error" if state["dead_cb"] else r.error,
-                prefix_hit_tokens=r.prefix_hit_tokens)
+                prefix_hit_tokens=r.prefix_hit_tokens, rolls=r._rolls)
             handle._result = res
             handle._event.set()
             if on_done is not None and not state["dead_cb"]:

@@ -61,7 +61,7 @@ class ServingEngine:
                  page: int = 16, prefix_cache_pages: int = 256,
                  paged_kv: bool = True, speculative: str = "off",
                  spec_k: int = 4, drafter_cfg: ModelConfig | None = None,
-                 drafter_params=None):
+                 drafter_params=None, window_policy=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -98,6 +98,16 @@ class ServingEngine:
                                       cfg=drafter_cfg)
             if speculative == "off":
                 self.speculative = "model"
+        # rolling-window KV policy (serving/scheduler.WindowPolicy):
+        # attention sinks + rolling paged window + async span
+        # summarization — unbounded session length at a flat per-slot
+        # page budget. None keeps append-only KV. Applies to the
+        # batcher's native paged path only; recurrent families decline.
+        self.window_policy = window_policy
+        self.span_summarizer = None
+        if window_policy is not None:
+            from repro.core.summarizer import SpanSummarizer
+            self.span_summarizer = SpanSummarizer(self.tokenizer)
 
         self._prefill_chunk = jax.jit(self.model.prefill_chunk)
         self._decode = jax.jit(self.model.decode_step)

@@ -47,6 +47,7 @@ pinning, LRU and the token-key radix tree live in the prefix cache.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
@@ -55,6 +56,24 @@ import jax.numpy as jnp
 from repro.models.common import LeafLayout, cache_layout, has_state_leaves
 
 TRASH_PAGE = 0
+
+
+@dataclass
+class PoolStats:
+    """Point-in-time pool pressure counters (host side, SpecStats-style
+    — the broker's meta channel and the gateway's x-stream-pool-*
+    headers surface these per request)."""
+    capacity: int        # allocatable pages
+    occupancy: int       # pages currently allocated
+    high_water: int      # max pages ever simultaneously allocated
+
+    @property
+    def occupancy_frac(self) -> float:
+        return self.occupancy / max(self.capacity, 1)
+
+    @property
+    def high_water_frac(self) -> float:
+        return self.high_water / max(self.capacity, 1)
 
 
 def chunk_plan(n_cached: int, n_total: int, page: int) -> list[int]:
@@ -183,6 +202,7 @@ class PagePool:
                 self._state_bytes += leaf.size * leaf.dtype.itemsize
         self._free = list(range(capacity, 0, -1))   # never hands out page 0
         self._free_set = set(self._free)
+        self.high_water = 0          # max pages simultaneously allocated
         self._detached = False       # paged_cache() transferred the buffers
         # Release-ordering guard: the prefix cache registers a predicate
         # over "does the tree still reference this page"; free() asserts
@@ -198,6 +218,14 @@ class PagePool:
     def n_free(self) -> int:
         return len(self._free)
 
+    def occupancy(self) -> int:
+        """Pages currently allocated (capacity minus the free list)."""
+        return self.capacity - len(self._free)
+
+    def stats(self) -> PoolStats:
+        return PoolStats(capacity=self.capacity, occupancy=self.occupancy(),
+                         high_water=self.high_water)
+
     def alloc(self) -> Optional[int]:
         """One free page id, or None when the pool is exhausted (the
         prefix cache then evicts or drops the publish)."""
@@ -205,6 +233,9 @@ class PagePool:
             return None
         pid = self._free.pop()
         self._free_set.discard(pid)
+        occ = self.capacity - len(self._free)
+        if occ > self.high_water:
+            self.high_water = occ
         return pid
 
     def free(self, pid: int):
@@ -233,6 +264,9 @@ class PagePool:
                   for buf in self._paged]
         cache = self._treedef.unflatten(leaves)
         cache["pos"] = jnp.zeros((batch,), jnp.int32)
+        # tokens rolled out of each slot's window (attention-sink rolling);
+        # rope positions and kernel kv lengths are slot-space: pos - offset
+        cache["pos_offset"] = jnp.zeros((batch,), jnp.int32)
         cache["block_tables"] = jnp.zeros((batch, max_pages), jnp.int32)
         self._paged = [None] * len(self._paged)
         self._detached = True

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import cache_layout, round_up
+from repro.models.layers import rope_shift
 from repro.serving.pagepool import PagePool, SlotSplicer, chunk_plan
 from repro.serving.prefix_cache import PrefixCache, PrefixLease
 from repro.serving.sampler import (GenerationParams, StopMatcher,
@@ -88,6 +89,42 @@ def clip_prompt(ids, max_new_tokens: int, max_seq: int) -> tuple:
     return ids[:keep], max_new
 
 
+@dataclass(frozen=True)
+class WindowPolicy:
+    """Attention-sink rolling window over a slot's paged KV.
+
+    ``sink_pages`` pages are pinned for the session's life (the
+    StreamingLLM attention sinks: the prompt head every later token
+    attends to), ``window_pages`` roll: when the slot has filled sinks +
+    window, the oldest ``roll_pages`` non-sink pages are evicted in
+    place — block-table rewrite plus a per-slot ``pos_offset`` bump, no
+    KV copies — and their token span is handed to the async span
+    summarizer. Cached keys stay valid across a roll because rope
+    positions are *slot-relative* (``pos - pos_offset``): sinks keep
+    their original rotations and the retained window is re-rotated by
+    exactly ``-roll_pages * page`` (rope composes, so this is the key a
+    fresh prefill at the shifted position would have produced).
+
+    A slot under a policy therefore decodes unboundedly at a flat
+    ``cap_pages = sink_pages + window_pages + 1`` pages (the spare page
+    keeps every decode/verify write inside the mapping between roll
+    checks). Only the native paged path qualifies — recurrent families
+    (SSM/xLSTM) have no page-granular state to evict and decline the
+    policy, keeping append-only KV.
+    """
+    sink_pages: int = 1
+    window_pages: int = 4
+    roll_pages: int = 1
+
+    def __post_init__(self):
+        assert self.sink_pages >= 1 and self.window_pages >= 1
+        assert 1 <= self.roll_pages <= self.window_pages
+
+    @property
+    def cap_pages(self) -> int:
+        return self.sink_pages + self.window_pages + 1
+
+
 @dataclass
 class Request:
     rid: str
@@ -114,6 +151,7 @@ class Request:
     # pages (pinned via the lease, never freed by the session)
     _pages: list = field(default_factory=list)
     _own: list = field(default_factory=list)
+    _rolls: int = 0                  # window rolls this session has taken
 
     def _matcher(self) -> Optional[StopMatcher]:
         if self._stop is None and self.params and self.params.stop:
@@ -167,6 +205,7 @@ class _Admission:
     ids: list                        # clipped prompt (absolute token basis)
     pieces: list                     # remaining chunk lengths
     pos: int = 0                     # tokens prefilled so far (incl. cached)
+    poff: int = 0                    # tokens rolled out during this prefill
     lease: Optional[PrefixLease] = None
     temp: float = 0.0                # resolved per-request sampling params
     top_p: float = 1.0
@@ -217,10 +256,28 @@ class ContinuousBatcher:
             self._bt = np.zeros((self.B, self.n_pages), np.int32)
             self._bt_dirty = False
             self._pool_keys = [k for k in self.cache
-                               if k not in ("pos", "block_tables")]
+                               if k not in ("pos", "pos_offset",
+                                            "block_tables")]
         else:
             self.cache = self.model.init_cache(self.B, self.max_seq)
             self.cache["pos"] = jnp.zeros((self.B,), jnp.int32)
+        # rolling-window policy (unbounded sessions at bounded memory).
+        # Needs the native paged path — the roll is pure block-table
+        # surgery plus a pos_offset bump, and recurrent state has no
+        # page address — so stateful families and the contiguous splice
+        # path decline it and keep append-only KV.
+        policy = getattr(engine, "window_policy", None)
+        self.window: Optional[WindowPolicy] = (
+            policy if (policy is not None and self.paged
+                       and policy.cap_pages <= self.n_pages) else None)
+        # async span-summarization sink: rolled-out token spans are
+        # handed over per (rid, ids) off the decode path
+        self.span_sink = getattr(engine, "span_summarizer", None)
+        self.rolls = 0               # window rolls across all sessions
+        self._poff = np.zeros(self.B, np.int64)   # host pos_offset mirror
+        if self.window is not None:
+            self._rope_leaves = self._roped_leaf_axes()
+            self._shift_fns: dict[int, Callable] = {}
         self.active: list[Optional[Request]] = [None] * self.B
         self.queue: list[Request] = []
         self._adm: Optional[_Admission] = None
@@ -307,6 +364,8 @@ class ContinuousBatcher:
             # park finished/empty slots at pos 0 so their (masked, unread)
             # cache writes can never run off the end of the seq axis
             cache["pos"] = jnp.where(alive, cache["pos"], 0)
+            if "pos_offset" in cache:
+                cache["pos_offset"] = jnp.where(alive, cache["pos_offset"], 0)
             packed = jnp.stack(
                 [nxt, run.astype(jnp.int32), done_now.astype(jnp.int32)],
                 axis=1)
@@ -377,6 +436,8 @@ class ContinuousBatcher:
             # the rollback: pos advances past accepted tokens only;
             # finished/parked slots park at 0 (same as the plain tick)
             cache["pos"] = jnp.where(alive, cache["pos"] + n_emit, 0)
+            if "pos_offset" in cache:
+                cache["pos_offset"] = jnp.where(alive, cache["pos_offset"], 0)
             last = jnp.take_along_axis(
                 g, jnp.maximum(n_emit - 1, 0)[:, None], axis=1)
             tok2 = jnp.where(run[:, None], last, pad).astype(jnp.int32)
@@ -406,11 +467,28 @@ class ContinuousBatcher:
                 return False
             cap = min(self.spec_k, int(self._maxgen[slot]) -
                       int(self._gen[slot]) - 1)
+            if self.window is not None:
+                # clamp the verify window at the roll-trigger boundary:
+                # a window that wrote past it would compute post-boundary
+                # tokens with pre-roll context, diverging from the plain
+                # path (which rolls first). With the clamp, rolls land at
+                # the same positions as plain decode and speculative
+                # emissions stay token-identical under rolling.
+                bnd = (self.window.cap_pages - 1) * self.page
+                spos = int(self._pos[slot]) - int(self._poff[slot])
+                cap = min(cap, bnd - spos)
             if cap <= 0:
                 continue
             if self.draft_hook is not None:
                 d = list(self.draft_hook(slot, req))[:cap]
             elif self.spec_mode == "model":
+                if self.window is not None and \
+                        self._pos[slot] + W > self.max_seq:
+                    # the drafter's contiguous (B, max_seq) cache can't
+                    # hold a rolled session past max_seq — plain decode
+                    # for this slot (its emissions are target-exact
+                    # either way)
+                    continue
                 # device-side proposal for the whole batch (below);
                 # only the per-slot clamp is decided here
                 self._draft_len[slot] = cap
@@ -424,6 +502,125 @@ class ContinuousBatcher:
                 self._draft_len[slot] = len(d)
                 any_draft = True
         return any_draft
+
+    # ------------------------------------------------------------ rolling window
+    def _roped_leaf_axes(self) -> list:
+        """(cache key, pool axis) for every pooled leaf holding rope-
+        rotated keys — the leaves a roll must re-rotate. GQA caches
+        roped k; MLA ropes only the decoupled k_rope part (the latent
+        c_kv is position-free). V is never rotated."""
+        cfg = self.cfg
+        out = []
+        for key in self._pool_keys:
+            if key == "k_rope" or key.endswith("_krope"):
+                out.append((key, self._layout[key].batch_axis))
+            elif cfg.use_rope and (key == "k" or key.endswith("_k")):
+                out.append((key, self._layout[key].batch_axis))
+        return out
+
+    def _shift_pages(self, pids: list, delta: int):
+        """Re-rotate the retained window's cached keys by ``-delta``
+        positions, in place in the pool buffers. Exact, not approximate:
+        rope rotations compose, so a key roped at position p rotated by
+        -delta is bitwise the key a fresh prefill would rope at
+        p - delta. One jitted dispatch per roll, touching only the
+        retained pages (trailing unwritten pages ride along — their
+        garbage is masked by kv_len until overwritten)."""
+        if not pids or not self._rope_leaves:
+            return
+        fn = self._shift_fns.get(len(pids))
+        if fn is None:
+            theta = self.cfg.rope_theta
+            axes = [ba for _, ba in self._rope_leaves]
+
+            def shift(bufs, pids, delta):
+                out = []
+                for buf, ba in zip(bufs, axes):
+                    pool = jnp.moveaxis(buf, ba, 0)
+                    rot = rope_shift(pool[pids], -delta, theta)
+                    pool = pool.at[pids].set(rot.astype(buf.dtype))
+                    out.append(jnp.moveaxis(pool, 0, ba))
+                return out
+
+            # donate: a roll must rotate its pages in place, not copy
+            # the whole pool (the same argument as store_pages)
+            fn = self._shift_fns[len(pids)] = jax.jit(shift,
+                                                      donate_argnums=(0,))
+        bufs = [self.cache[k] for k, _ in self._rope_leaves]
+        new = fn(bufs, jnp.asarray(pids, jnp.int32),
+                 jnp.asarray(delta, jnp.int32))
+        for (k, _), buf in zip(self._rope_leaves, new):
+            self.cache[k] = buf
+
+    def _roll_once(self, req: Request, poff: int) -> int:
+        """One roll of ``req``'s mapping: evict the oldest non-sink
+        pages, hand their token span to the summarizer, re-rotate the
+        retained window, and append replacement pages at the tail.
+        Returns the new pos_offset; the caller updates the device /
+        host position state for wherever the mapping lives (decode slot
+        or in-flight admission)."""
+        w = self.window
+        s, r = w.sink_pages, w.roll_pages
+        delta = r * self.page
+        evicted = req._pages[s:s + r]
+        ev_own = req._own[s:s + r]
+        retained = req._pages[s + r:]
+        # a roll may only touch session-private pages past the sinks:
+        # prefix matching and publishing are sink-capped for policy
+        # sessions, so tree pages never sit in the rolling window (the
+        # pool's free_guard would catch a violation anyway)
+        assert all(req._own[s:]), \
+            "tree-owned page inside the rolling window"
+        # span ids BEFORE mutating state: slot-space [s, s+r) pages map
+        # absolute tokens [s*page + poff, (s+r)*page + poff)
+        full = (req._kv_ids or []) + req.output_ids
+        lo = s * self.page + poff
+        span = full[lo:lo + delta]
+        # free-then-realloc: LIFO hands the same pids straight back as
+        # the window's new tail, so pool occupancy is flat across a
+        # roll and the re-allocation can never fail
+        for pid, own in zip(evicted, ev_own):
+            if own:
+                self.pool.free(pid)
+        fresh = self.prefix._alloc_many(len(evicted))
+        assert len(fresh) == len(evicted), "roll re-allocation failed"
+        req._pages = req._pages[:s] + retained + fresh
+        req._own = req._own[:s] + req._own[s + r:] + [True] * len(fresh)
+        self._shift_pages(retained, delta)
+        if self.span_sink is not None and span:
+            self.span_sink.submit(req.rid, span)
+        req._rolls += 1
+        self.rolls += 1
+        return poff + delta
+
+    def _maybe_roll_slots(self):
+        """Roll any active slot whose next tick could write past its
+        mapped cap. Runs before drafts are prepared, so a verify window
+        (W <= page) can never straddle a roll boundary — the spare page
+        in cap_pages absorbs the worst-case window between checks."""
+        w = self.window
+        if w is None:
+            return
+        cap_tok = w.cap_pages * self.page
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            poff = int(self._poff[slot])
+            rolled = False
+            while int(self._pos[slot]) - poff + self.page > cap_tok:
+                poff = self._roll_once(req, poff)
+                rolled = True
+            if rolled:
+                self._poff[slot] = poff
+                self.cache["pos_offset"] = \
+                    self.cache["pos_offset"].at[slot].set(poff)
+                self._bt[slot, :] = 0
+                self._bt[slot, :len(req._pages)] = req._pages
+                self._bt_dirty = True
+                if self.spec:
+                    # draft state from before the roll referenced the
+                    # old window layout; drafts re-propose post-roll
+                    self._draft_len[slot] = 0
 
     # ------------------------------------------------------------ admission
     def submit(self, req: Request):
@@ -449,8 +646,12 @@ class ContinuousBatcher:
                 # FIRST, then free what the session still owns. The
                 # transfer flips their _own flags, so the sweep below
                 # cannot reclaim a page the tree now references — and
-                # pool.free() asserts exactly that invariant.
-                self.prefix.publish_paged(adm.lease, adm.ids, adm.pos,
+                # pool.free() asserts exactly that invariant. Rolling
+                # sessions publish their sinks only (window pages are
+                # position-shifted, not what a cold prefill computes).
+                kv_pub = (adm.pos if self.window is None else
+                          min(adm.pos, self.window.sink_pages * self.page))
+                self.prefix.publish_paged(adm.lease, adm.ids, kv_pub,
                                           req._pages, req._own)
             elif adm.lease is not None and not self.pool.stateful:
                 # stateless models defer publishing to admission end —
@@ -511,8 +712,17 @@ class ContinuousBatcher:
                 break
             if req is None:
                 return
-            ids, req.max_new_tokens = clip_prompt(
-                req.prompt_ids, req.max_new_tokens, self.max_seq)
+            w = self.window
+            if w is None:
+                ids, req.max_new_tokens = clip_prompt(
+                    req.prompt_ids, req.max_new_tokens, self.max_seq)
+            else:
+                # rolling-window sessions are unbounded: the prompt
+                # rolls through the window during prefill and decode
+                # rolls forever after, so the seq-axis capacity rule
+                # does not apply
+                ids = list(req.prompt_ids)
+                req.max_new_tokens = max(int(req.max_new_tokens), 1)
             req._kv_ids = ids
             lease = None
             n_cached = 0
@@ -525,8 +735,16 @@ class ContinuousBatcher:
                 # memory mid-stream. The max written position is
                 # len(ids) + max_new - 2 (the last sampled token is
                 # never fed back), hence the page count below.
-                lease = self.prefix.begin(req.cache_salt, ids)
+                # rolling sessions cap prefix matching (and, later,
+                # publishing) to the sink region: everything past the
+                # sinks gets evicted and re-rotated by rolls, which must
+                # never touch a page the tree shares with other sessions
+                match_ids = (ids if w is None
+                             else ids[:w.sink_pages * self.page + 1])
+                lease = self.prefix.begin(req.cache_salt, match_ids)
                 need = -(-(len(ids) + req.max_new_tokens - 1) // self.page)
+                if w is not None:
+                    need = min(need, w.cap_pages)
                 private = need - len(lease.chain)
                 pids = self.prefix._alloc_many(private)
                 if len(pids) < private:
@@ -548,6 +766,7 @@ class ContinuousBatcher:
                 row[0, :len(req._pages)] = req._pages
                 one = {k: self.cache[k] for k in self._pool_keys}
                 one["pos"] = jnp.asarray(n_cached, jnp.int32)
+                one["pos_offset"] = jnp.zeros((), jnp.int32)
                 one["block_tables"] = jnp.asarray(row)
             else:
                 one = self.model.init_cache(1, self.max_seq)
@@ -582,6 +801,20 @@ class ContinuousBatcher:
         logits = None
         while adm.pieces and budget > 0:
             n = adm.pieces.pop(0)
+            if self.window is not None:
+                # prompts longer than the window roll DURING prefill:
+                # same mechanics as a decode-time roll, applied to the
+                # admission's private block-table row before the chunk
+                # whose write would overflow the mapped cap
+                w, rolled = self.window, False
+                while adm.pos - adm.poff + n > w.cap_pages * self.page:
+                    adm.poff = self._roll_once(adm.req, adm.poff)
+                    rolled = True
+                if rolled:
+                    row = np.zeros((1, self.n_pages), np.int32)
+                    row[0, :len(adm.req._pages)] = adm.req._pages
+                    adm.cache["block_tables"] = jnp.asarray(row)
+                    adm.cache["pos_offset"] = jnp.asarray(adm.poff, jnp.int32)
             chunk = jnp.asarray([adm.ids[adm.pos:adm.pos + n]], jnp.int32)
             if self.paged:
                 # the admission writes into the SAME pool buffers the
@@ -635,8 +868,13 @@ class ContinuousBatcher:
             # paged publish is pure ownership transfer — the prompt's
             # full pages BECOME tree nodes (zero bytes moved); a dedupe
             # hit frees our duplicate and repoints the mapping at the
-            # tree's bitwise-identical page (folded into req._pages)
-            self.prefix.publish_paged(adm.lease, adm.ids, adm.pos,
+            # tree's bitwise-identical page (folded into req._pages).
+            # Rolling sessions publish only their sink pages — the rest
+            # of the mapping is about to roll and re-rotate in place,
+            # which must never happen to a shared tree page.
+            kv_pub = (adm.pos if self.window is None else
+                      min(adm.pos, self.window.sink_pages * self.page))
+            self.prefix.publish_paged(adm.lease, adm.ids, kv_pub,
                                       req._pages, req._own)
         elif adm.lease is not None and not self.pool.stateful:
             # attention-only models: publish the whole prompt's pages in
@@ -668,6 +906,9 @@ class ContinuousBatcher:
             self._bt[slot, :len(req._pages)] = req._pages
             self._bt_dirty = True
             self.cache["pos"] = self.cache["pos"].at[slot].set(len(adm.ids))
+            self.cache["pos_offset"] = \
+                self.cache["pos_offset"].at[slot].set(adm.poff)
+            self._poff[slot] = adm.poff
         else:
             used = min(round_up(len(adm.ids), self.page), self.max_seq)
             self.cache = self._splicer(self.cache, adm.cache, slot, used)
@@ -681,10 +922,13 @@ class ContinuousBatcher:
         self._pos[slot] = len(adm.ids)
         if self.spec:
             self._draft_len[slot] = 0
-            if self._drafter is not None:
+            if self._drafter is not None and (
+                    self.window is None or len(adm.ids) <= self.max_seq):
                 # the drafter ingests the prompt off the TTFT path (the
                 # first token already left); its splice traffic is
-                # accounted on the drafter, not the admission contract
+                # accounted on the drafter, not the admission contract.
+                # (A rolling session's prompt can exceed the drafter's
+                # contiguous cache — such slots simply never draft.)
                 self._drafter.admit(slot, adm.ids)
 
     # ------------------------------------------------------------ tick
@@ -708,11 +952,16 @@ class ContinuousBatcher:
         # prefill re-crosses them at an aligned boundary and upgrades
         # them in place.
         if self.paged:
-            if req._lease is not None and req._kv_ids is not None:
+            if req._lease is not None and req._kv_ids is not None \
+                    and req._rolls == 0:
                 kv_n = len(req._kv_ids) + max(len(req.output_ids) - 1, 0)
                 # ownership transfer again: the decoded extension's pages
                 # join the tree in place. MUST precede the owned-page
-                # sweep below (pool.free asserts the ordering).
+                # sweep below (pool.free asserts the ordering). A session
+                # that rolled skips this: its non-sink pages hold
+                # position-shifted KV, not the bitwise cold-prefill pages
+                # the tree's token keys promise (sinks were published at
+                # admission; the roll spans live in the summarizer).
                 self.prefix.publish_paged(req._lease,
                                           req._kv_ids + req.output_ids,
                                           kv_n, req._pages, req._own)
@@ -736,6 +985,7 @@ class ContinuousBatcher:
         self.active[slot] = None
         self._active_m[slot] = False
         self._pos[slot] = 0
+        self._poff[slot] = 0
         if self.spec:
             # release draft state (cancel mid-verify lands here too):
             # the slot re-admits with a clean window
@@ -745,6 +995,13 @@ class ContinuousBatcher:
     def _in_flight(self) -> int:
         return (sum(r is not None for r in self.active)
                 + (self._adm is not None))
+
+    def pool_stats(self):
+        """Point-in-time PoolStats for the shared page pool (None when
+        prefix caching is disabled). Flat ``high_water`` across a long
+        rolling session is the bounded-memory headline the longcontext
+        benchmark gates on."""
+        return self.pool.stats() if self.pool is not None else None
 
     def bytes_copied_per_admission(self) -> float:
         """Device bytes moved per admitted session by splice/store/load
@@ -826,6 +1083,7 @@ class ContinuousBatcher:
                 self._advance_admissions()
         if not any(r is not None for r in self.active):
             return self._in_flight()
+        self._maybe_roll_slots()
         if self.paged and self._bt_dirty:
             self.cache["block_tables"] = jnp.asarray(self._bt)
             self._bt_dirty = False

@@ -122,3 +122,56 @@ def test_pallas_paged_mqa_and_soft_cap():
     exp = ref.paged_attention(q, kp, vp, block_tables=bt, kv_len=kv_len,
                               logit_soft_cap=30.0)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+# ------------------------------------------------------- rolling pos_offset
+def test_ref_pos_offset_shortens_slot_kv():
+    """pos_offset semantics: the slot-space KV length is
+    kv_len - pos_offset, so (kv_len=L, pos_offset=p) must equal
+    (kv_len=L-p, pos_offset=0) exactly — the block table already maps
+    the post-roll layout; the offset only converts absolute length."""
+    rng = np.random.default_rng(7)
+    q, kp, vp, bt = _setup(rng)
+    kv_len = jnp.asarray([20, 70, 96], jnp.int32)
+    poff = jnp.asarray([0, 16, 48], jnp.int32)
+    out = ref.paged_attention(q, kp, vp, block_tables=bt, kv_len=kv_len,
+                              pos_offset=poff)
+    exp = ref.paged_attention(q, kp, vp, block_tables=bt,
+                              kv_len=kv_len - poff)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_pallas_pos_offset_matches_ref_and_skips_rolled_pages():
+    """The kernel receives pos_offset via scalar prefetch: outputs must
+    match the ref oracle, and pages past the slot-space length are
+    fully skipped — clobbering them cannot change a bit."""
+    rng = np.random.default_rng(8)
+    q, kp, vp, bt = _setup(rng)
+    kv_len = jnp.asarray([36, 80, 96], jnp.int32)
+    poff = jnp.asarray([16, 32, 64], jnp.int32)
+    out = paged_attention(q, kp, vp, block_tables=bt, kv_len=kv_len,
+                          pos_offset=poff, interpret=True)
+    exp = ref.paged_attention(q, kp, vp, block_tables=bt, kv_len=kv_len,
+                              pos_offset=poff)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+    # slot 2's slot-space length is 32: pages 3..5 of its table are
+    # garbage the mask must zero out entirely
+    tail = jnp.asarray(np.asarray(bt)[2, 3:])
+    out2 = paged_attention(q, kp.at[tail].set(1e6), vp.at[tail].set(-1e6),
+                           block_tables=bt, kv_len=kv_len, pos_offset=poff,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_pos_offset_zero_is_bitwise_default():
+    """poff=0 must take the exact same arithmetic path as no poff at
+    all — the token-identity guarantee for window-fitting sessions."""
+    rng = np.random.default_rng(9)
+    q, kp, vp, bt = _setup(rng)
+    kv_len = jnp.asarray([17, 37, 96], jnp.int32)
+    base = paged_attention(q, kp, vp, block_tables=bt, kv_len=kv_len,
+                           interpret=True)
+    zero = paged_attention(q, kp, vp, block_tables=bt, kv_len=kv_len,
+                           pos_offset=jnp.zeros((3,), jnp.int32),
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(zero))

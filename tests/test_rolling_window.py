@@ -1,0 +1,274 @@
+"""Rolling paged KV windows: attention sinks + in-place page rolls +
+async span summarization (unbounded sessions at bounded memory).
+
+The contract under test: a slot under a :class:`WindowPolicy` decodes
+forever at a flat ``cap_pages = sink_pages + window_pages + 1`` pages.
+A roll is block-table surgery — evict the oldest non-sink pages, hand
+their token span to the :class:`SpanSummarizer`, re-rotate the retained
+window's keys by ``-roll_pages * page`` (rope composes, so cached keys
+stay bitwise what a fresh prefill at the shifted position would
+produce), bump ``pos_offset`` — with zero KV copies and zero net pool
+allocation. Sessions that FIT the window must be token-identical to the
+no-policy path (pos_offset stays 0 → exact integer arithmetic), and
+speculation must clamp its verify windows at the roll boundary so
+spec+roll equals plain+roll bitwise.
+"""
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving import (ContinuousBatcher, GenerationParams, Request,
+                           ServingEngine, WindowPolicy)
+
+POLICY = WindowPolicy(sink_pages=1, window_pages=2, roll_pages=1)  # cap 4
+PROMPT = "rolling window prompt with enough text to cross the sinks!"
+
+
+@pytest.fixture(scope="module", params=["minitron-8b", "deepseek-v2-lite-16b"])
+def engine(request):
+    cfg = get_smoke_config(request.param).replace(vocab_size=300,
+                                                  vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96, window_policy=POLICY)
+    e.warmup()
+    yield e
+    e.shutdown()
+
+
+def run_one(cb, engine, prompt, max_new=6, params=None, rid="r"):
+    out = {}
+    ids = (engine.tokenizer.encode(prompt) if isinstance(prompt, str)
+           else list(prompt))
+    req = Request(rid=rid, prompt_ids=ids, max_new_tokens=max_new,
+                  params=params,
+                  on_done=lambda r: out.update(tokens=r.output_ids,
+                                               hit=r.prefix_hit_tokens,
+                                               rolls=r._rolls,
+                                               reason=r.finish_reason))
+    cb.submit(req)
+    cb.run_until_drained()
+    return out
+
+
+def _plain_batcher(engine, **kw):
+    """A no-policy batcher over the policy engine: flip the attribute
+    only for construction (the batcher reads it once)."""
+    pol, engine.window_policy = engine.window_policy, None
+    try:
+        cb = ContinuousBatcher(engine, slots=2, max_seq=96, **kw)
+    finally:
+        engine.window_policy = pol
+    assert cb.window is None
+    return cb
+
+
+# ------------------------------------------------------------ gating
+def test_policy_active_on_paged_path(engine):
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    assert cb.paged and cb.window is POLICY
+    assert "pos_offset" in cb.cache
+    assert engine.span_summarizer is not None
+
+
+def test_policy_declined_by_recurrent_family():
+    """SSM state has no page address: the policy must be declined, not
+    half-applied — append-only KV, no pos_offset leaf in play."""
+    cfg = get_smoke_config("zamba2-7b").replace(vocab_size=300,
+                                                vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96, window_policy=POLICY)
+    cb = ContinuousBatcher(e, slots=2, max_seq=96, prefix_pages=64)
+    assert not cb.paged and cb.window is None
+    e.shutdown()
+
+
+def test_policy_declined_on_contiguous_path():
+    cfg = get_smoke_config("minitron-8b").replace(vocab_size=300,
+                                                  vocab_pad_to=64)
+    e = ServingEngine(cfg, max_seq=96, paged_kv=False, window_policy=POLICY)
+    cb = ContinuousBatcher(e, slots=2, max_seq=96, prefix_pages=64)
+    assert not cb.paged and cb.window is None
+    e.shutdown()
+
+
+def test_policy_declined_when_cap_exceeds_table(engine):
+    """cap_pages > n_pages could never map a full window; the batcher
+    must fall back to the bounded append-only contract."""
+    big = WindowPolicy(sink_pages=2, window_pages=8)        # cap 11 > 6
+    pol, engine.window_policy = engine.window_policy, big
+    try:
+        cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    finally:
+        engine.window_policy = pol
+    assert cb.window is None
+
+
+# ------------------------------------------------ window-fitting identity
+def test_window_fitting_token_identity(engine):
+    """THE acceptance criterion: a session that fits sinks+window takes
+    zero rolls and decodes bit-for-bit the no-policy tokens — greedy
+    AND seeded — because pos_offset stays 0 and every rope position is
+    computed by the same integer arithmetic. 'Fits' means staying under
+    the conservative roll trigger: (cap_pages - 1) * page tokens (the
+    spare page is reserved for worst-case writes between roll checks)."""
+    short = "fits in the window"              # 19 tok + 6 new < 48
+    seeded = GenerationParams(max_tokens=6, temperature=0.8, seed=1234)
+    outs = {}
+    for mode, make in (("policy", lambda: ContinuousBatcher(
+                            engine, slots=2, max_seq=96, prefix_pages=64)),
+                       ("plain", lambda: _plain_batcher(
+                            engine, prefix_pages=64))):
+        cb = make()
+        outs[mode] = {
+            "greedy": run_one(cb, engine, short, max_new=6),
+            "seeded": run_one(cb, engine, short + " y", max_new=6,
+                              params=seeded),
+        }
+    assert outs["policy"]["greedy"]["rolls"] == 0
+    for kind in ("greedy", "seeded"):
+        assert outs["policy"][kind]["tokens"] == outs["plain"][kind]["tokens"]
+
+
+# --------------------------------------------------- rolling past the cap
+def test_rolls_keep_occupancy_flat(engine):
+    """Decode far past the window: the session must roll, yet the
+    pool's high-water mark stays at the policy cap — free-then-realloc
+    keeps every roll at zero net allocation — and the whole run is
+    deterministic (two identical runs, identical tokens and rolls)."""
+    runs = []
+    for _ in range(2):
+        cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+        out = run_one(cb, engine, PROMPT, max_new=90)
+        st = cb.pool_stats()
+        runs.append((out["tokens"], out["rolls"]))
+        assert out["rolls"] >= 2 and len(out["tokens"]) == 90
+        assert st.high_water <= POLICY.cap_pages
+        # finish released the window; only published sink pages remain
+        assert st.occupancy <= POLICY.sink_pages
+    assert runs[0] == runs[1]
+
+
+def test_prompt_longer_than_window_rolls_in_prefill(engine):
+    """A prompt that overflows sinks+window must roll DURING chunked
+    prefill (clip_prompt no longer applies to policy sessions) and
+    still decode to completion at flat occupancy."""
+    ids = list(range(2, 2 + 150))            # 150 tokens >> 64-token cap
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    out = run_one(cb, engine, ids, max_new=8)
+    assert len(out["tokens"]) == 8 or out["reason"] == "stop"
+    assert out["rolls"] >= 5                 # (150 - 64) / 16 rolls at least
+    assert cb.pool_stats().high_water <= POLICY.cap_pages
+
+
+def test_summarizer_receives_rolled_spans(engine):
+    """Every rolled span lands in the session's append-only summary:
+    rolled_tokens accounts exactly roll_pages*page per roll, and the
+    summary text is a decode of the evicted spans (byte tokenizer =
+    lossless head for spans under the budget)."""
+    sink = engine.span_summarizer
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    out = run_one(cb, engine, PROMPT, max_new=90, rid="span-test")
+    assert out["rolls"] >= 2
+    assert sink.flush(timeout=30.0)
+    assert sink.rolled_tokens("span-test") == \
+        out["rolls"] * POLICY.roll_pages * cb.page
+    summary = sink.summary("span-test")
+    assert summary
+    # the first rolled span starts right after the sink pages: its text
+    # must appear verbatim at the head of the summary block
+    ids = engine.tokenizer.encode(PROMPT)
+    full = ids + out["tokens"]
+    lo = POLICY.sink_pages * cb.page
+    first_span = engine.tokenizer.decode(full[lo:lo + cb.page])
+    assert summary.startswith(first_span)    # 16-token span < 160 budget
+
+    sink.drop("span-test")
+
+
+def test_roll_never_frees_tree_pages(engine):
+    """Sink pages published to the prefix tree are shared across
+    sessions; a later session's rolls must only ever recycle its
+    session-private window pages. The tree's pids must never appear on
+    the free list, and a third warm session must still hit the sinks."""
+    cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    run_one(cb, engine, PROMPT, max_new=90, rid="seed")      # publishes sinks
+    tree_pids = set(cb.prefix._pids)
+    assert tree_pids                         # sink pages live in the tree
+    req = Request(rid="warm", prompt_ids=engine.tokenizer.encode(PROMPT),
+                  max_new_tokens=90)
+    cb.submit(req)
+    while not req.done:
+        cb.step()
+        assert not (tree_pids & set(cb.pool._free))
+    assert req._rolls >= 2
+    assert req.prefix_hit_tokens > 0         # decoded on top of tree sinks
+    # rolled sessions never publish extensions (their tail is a moving
+    # window, not a stable prefix) — the tree still holds only the sinks
+    assert set(cb.prefix._pids) == tree_pids
+    warm = run_one(cb, engine, PROMPT, max_new=4, rid="third")
+    assert warm["hit"] > 0
+
+
+# ------------------------------------------------- speculation + rolling
+def test_spec_roll_identity(engine):
+    """Satellite regression: a verify window must never straddle the
+    roll boundary. With the draft cap clamped at the boundary,
+    speculative decode under a rolling window is token-identical to
+    plain decode under the same window — same tokens, same roll count,
+    with at least one roll forced mid-stream."""
+    plain = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    ref = run_one(plain, engine, PROMPT, max_new=80, rid="plain")
+    assert ref["rolls"] >= 2
+    engine.speculative = "ngram"
+    try:
+        spec = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    finally:
+        engine.speculative = "off"
+    assert spec.spec and spec.window is POLICY
+    out = run_one(spec, engine, PROMPT, max_new=80, rid="spec")
+    assert spec.spec_stats.spec_ticks > 0
+    assert out["tokens"] == ref["tokens"]
+    assert out["rolls"] == ref["rolls"]
+
+
+def test_draft_cap_clamped_at_roll_boundary(engine):
+    """White-box check of the clamp itself: park a slot one token shy
+    of the roll boundary and offer an oversized draft — the scheduler
+    must clamp the verify window to the boundary, never past it."""
+    engine.speculative = "ngram"
+    try:
+        cb = ContinuousBatcher(engine, slots=2, max_seq=96, prefix_pages=64)
+    finally:
+        engine.speculative = "off"
+    bnd = (POLICY.cap_pages - 1) * cb.page
+    seen = []
+
+    def hook(slot, req):
+        spos = int(cb._pos[slot]) - int(cb._poff[slot])
+        seen.append(bnd - spos)
+        return [5] * cb.spec_k               # always offer a full draft
+
+    cb.draft_hook = hook
+    run_one(cb, engine, PROMPT, max_new=80)
+    # whenever the slot sat within spec_k of the boundary, the verify
+    # window was clamped (accepted+bonus <= remaining room), so spos
+    # never lands past bnd + 1 (the +1 is the post-boundary trigger tick)
+    assert any(room <= cb.spec_k for room in seen)
+    assert all(room >= 0 for room in seen)
+
+
+# ------------------------------------------------------------ broker
+def test_broker_reports_rolls_and_pool_meta(engine):
+    """Session layer: rolling sessions are unbounded (no prompt clip),
+    SessionResult carries the roll count, and on_meta exposes the pool
+    occupancy/high-water/capacity the gateway forwards as headers."""
+    from repro.serving import SessionBroker
+
+    broker = SessionBroker(engine, slots=2, max_seq=96, prefix_pages=64)
+    meta = {}
+    h = broker.submit(PROMPT, max_new_tokens=90, on_meta=meta.update)
+    res = h.result(timeout=300)
+    broker.shutdown()
+    assert res.rolls >= 2
+    assert res.n_generated == 90             # not clipped by max_seq
+    assert meta["pool_capacity"] == 64
+    assert 0 < meta["pool_occupancy"] <= meta["pool_capacity"]
+    assert meta["pool_high_water"] >= meta["pool_occupancy"]

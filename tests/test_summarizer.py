@@ -99,3 +99,83 @@ def test_tokenizer_aware_counting_matches_engine_prefill():
     assert conversation_tokens(msgs) == conversation_tokens(msgs, tk)
     s = TierAwareSummarizer(tokenizer=tk)
     assert s.fits(msgs, "local")
+
+
+# ================================================== async span summarizer
+# (rolling-window serving: repro.serving.scheduler hands each evicted
+# page span here off the decode path)
+
+def _span_sink(**kw):
+    from repro.core.summarizer import SpanSummarizer
+    from repro.serving.tokenizer import ByteTokenizer
+    return SpanSummarizer(ByteTokenizer(512), **kw)
+
+
+def test_span_empty_is_a_noop():
+    """An empty span (a roll of fully unwritten positions can produce
+    one at the margins) must not enqueue work, spin up the worker, or
+    leave a dangling line."""
+    s = _span_sink()
+    s.submit("r", [])
+    assert s.spans_in == 0 and s._thread is None
+    assert s.flush(timeout=1.0)
+    assert s.summary("r") == "" and s.rolled_tokens("r") == 0
+
+
+def test_span_of_only_special_tokens_counts_but_emits_no_line():
+    """A span holding only the system prompt's BOS/padding decodes to
+    empty text: the roll is still accounted (rolled_tokens moves) but
+    the summary block gains no blank line."""
+    s = _span_sink()
+    tk_bos = 1                               # ByteTokenizer BOS id
+    s.submit("r", [tk_bos, tk_bos, tk_bos])
+    assert s.flush(timeout=5.0)
+    assert s.summary("r") == ""
+    assert s.rolled_tokens("r") == 3
+
+
+def test_double_roll_queues_in_order_never_drops():
+    """A session that rolls twice before the worker touches the first
+    span has BOTH spans folded, oldest first — the global FIFO makes
+    per-session ordering structural, not timing-dependent."""
+    from repro.serving.tokenizer import ByteTokenizer
+    tk = ByteTokenizer(512)
+    s = _span_sink()
+    first = tk.encode("the first rolled span", add_bos=False)
+    second = tk.encode("the second rolled span", add_bos=False)
+    s.submit("r", first)                     # back-to-back: the worker
+    s.submit("r", second)                    # sees a 2-deep queue
+    assert s.flush(timeout=5.0)
+    assert s.spans_done == 2
+    lines = s.summary("r").split("\n")
+    assert lines == ["the first rolled span", "the second rolled span"]
+    assert s.rolled_tokens("r") == len(first) + len(second)
+
+
+def test_span_summary_is_append_only_and_clipped():
+    """Prefix stability (the radix-tree contract): each flush's summary
+    is a byte prefix of the next. Spans over the budget are head-
+    clipped through the same counter as the budget."""
+    s = _span_sink(span_budget=10)
+    prev = ""
+    for i in range(4):
+        s.submit("r", _span_sink().tokenizer.encode(
+            f"span {i} padded well past ten tokens", add_bos=False))
+        assert s.flush(timeout=5.0)
+        cur = s.summary("r")
+        assert cur.startswith(prev), "summary rewrote its prefix"
+        prev = cur
+    for line in prev.split("\n"):
+        # byte tokenizer: budget counts bytes + 1 BOS -> 9 chars max
+        assert len(line.encode()) <= 10
+
+
+def test_span_sessions_are_isolated_and_droppable():
+    s = _span_sink()
+    s.submit("a", _span_sink().tokenizer.encode("alpha", add_bos=False))
+    s.submit("b", _span_sink().tokenizer.encode("beta", add_bos=False))
+    assert s.flush(timeout=5.0)
+    assert s.summary("a") == "alpha" and s.summary("b") == "beta"
+    s.drop("a")
+    assert s.summary("a") == "" and s.rolled_tokens("a") == 0
+    assert s.summary("b") == "beta"
