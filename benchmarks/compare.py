@@ -41,6 +41,7 @@ DIRECTIONS = {
     "spec_acceptance_rate": "higher",
     "longcontext_tok_s_flatness": "higher",
     "longcontext_occupancy_ratio": "lower",
+    "fleet_scaling_efficiency": "higher",
 }
 
 EPS = 1e-9

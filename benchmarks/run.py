@@ -39,7 +39,11 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
       — a 16x-window rolling session's last-quarter over first-quarter
       decode tok/s, and its pool high-water over full-context pages
       (benchmarks/longcontext.py; needle-retrieval parity with the
-      full-context oracle is asserted in-run).
+      full-context oracle is asserted in-run);
+    * ``fleet_scaling_efficiency`` — 2-replica EngineFleet aggregate
+      tok/s at 64 concurrent sessions over 2x the single-replica
+      aggregate (failover stream identity is asserted in-run; the
+      efficiency floor in baselines.json assumes a multi-core runner).
     """
     t0 = time.perf_counter()
 
@@ -65,6 +69,9 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
     from benchmarks import longcontext
     r_lc = longcontext.run(total_tokens=1024, quiet=True)
 
+    r_fl = concurrency.run_fleet(replicas=2, sessions=64, tokens=8,
+                                 repeats=2, quiet=True)
+
     metrics = {
         "bg_decode_retention": r_int["retention"],
         "agg_speedup_16_sessions": r_cc["summary"]["speedup_at_max"],
@@ -76,6 +83,8 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
         "spec_acceptance_rate": r_sp["acceptance_rate"],
         "longcontext_tok_s_flatness": r_lc["tok_s_flatness"],
         "longcontext_occupancy_ratio": r_lc["occupancy_ratio"],
+        "fleet_scaling_efficiency":
+            r_fl["summary"]["fleet_scaling_efficiency"],
     }
     out = {
         "metrics": metrics,
@@ -91,6 +100,12 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
             "longcontext_rolls": r_lc["rolls"],
             "longcontext_needle_recall": r_lc["needle_recall"],
             "longcontext_high_water_pages": r_lc["high_water_pages"],
+            "fleet_agg_tok_s_1rep": r_fl["summary"]["agg_tok_s_1rep"],
+            "fleet_agg_tok_s_2rep": r_fl["summary"]["agg_tok_s_2rep"],
+            "fleet_cpus": r_fl["summary"]["cpus"],
+            "fleet_failover_identical":
+                r_fl["summary"]["failover_identical_greedy"]
+                and r_fl["summary"]["failover_identical_seeded"],
         },
         "wall_s": round(time.perf_counter() - t0, 1),
     }

@@ -12,12 +12,13 @@ from repro.core.router import TierRouter, FALLBACK_CHAINS
 from repro.core.handler import StreamingHandler
 from repro.core.tiers import (TierSpec, TierResult, TierBackend, LocalBackend,
                               HPCBackend, CloudBackend, BackendError)
+from repro.errors import SchedulerStopped
 from repro.core.auth import (GlobusAuthService, ApiKeyStore, DualAuthenticator,
                              SlidingWindowRateLimiter, AuthFailure)
 from repro.core.gateway import (StreamGateway, GatewayResponse, ValidationError,
                                 validate_chat_request, DEFAULT_ALIASES)
 from repro.core.proxy import HPCAsAPIProxy
-from repro.core.metrics import UsageTracker
+from repro.core.metrics import FleetMetrics, RoutingDecision, UsageTracker
 from repro.core.system import StreamSystem, build_system
 from repro.serving.sampler import GenerationParams
 
@@ -31,6 +32,7 @@ __all__ = [
     "TierRouter", "FALLBACK_CHAINS", "StreamingHandler",
     "TierSpec", "TierResult", "TierBackend",
     "LocalBackend", "HPCBackend", "CloudBackend", "BackendError",
+    "SchedulerStopped", "FleetMetrics", "RoutingDecision",
     "GlobusAuthService", "ApiKeyStore", "DualAuthenticator",
     "SlidingWindowRateLimiter", "AuthFailure",
     "StreamGateway", "GatewayResponse", "ValidationError",

@@ -292,20 +292,24 @@ class StreamGateway:
     # ------------------------------------------------------- non-stream
     def _complete(self, rid, model, query, history, tier, params,
                   salt) -> GatewayResponse:
+        cache_meta: dict = {}
         try:
             h = self.handler.handle(query, history, override_tier=tier,
-                                    params=params, cache_salt=salt)
+                                    params=params, cache_salt=salt,
+                                    on_meta=cache_meta.update)
         except BackendError as e:
             return GatewayResponse(status=502, body=_err("upstream_error", str(e)))
+        meta = self._meta(h, cache_meta)
         body = chat_completion(
             rid, model, h.result.text,
             prompt_tokens=h.result.n_prompt_tokens,
             completion_tokens=h.result.n_completion_tokens,
             finish_reason=h.result.finish_reason)
-        meta = self._meta(h)
         body["stream"] = meta
-        return GatewayResponse(status=200, body=body,
-                               headers=self._meta_headers(rid, meta))
+        headers = self._meta_headers(rid, meta)
+        if "replica" in cache_meta:
+            headers["x-stream-replica"] = str(int(cache_meta["replica"]))
+        return GatewayResponse(status=200, body=body, headers=headers)
 
     # ----------------------------------------------------------- stream
     def _stream(self, rid, model, query, history, tier, params,
@@ -365,21 +369,28 @@ class StreamGateway:
                        f"hit={int(cache_meta.get('prefix_hit_tokens', 0))}"}
         if "pool_occupancy" in cache_meta:
             # KV pool pressure at first token (paged serving tiers):
-            # used/high-water/capacity in pages. Flat high-water across
-            # long sessions is the rolling-window bounded-memory signal.
+            # used/high-water/capacity in pages, AGGREGATED across the
+            # fleet's replicas when the local tier is an EngineFleet.
+            # Flat high-water across long sessions is the
+            # rolling-window bounded-memory signal.
             headers["x-stream-pool-occupancy"] = \
                 str(int(cache_meta["pool_occupancy"]))
             headers["x-stream-pool-high-water"] = \
                 str(int(cache_meta.get("pool_high_water", 0)))
             headers["x-stream-pool-capacity"] = \
                 str(int(cache_meta.get("pool_capacity", 0)))
+        if "replica" in cache_meta:
+            # fleet serving: which replica produced the first token (a
+            # mid-stream failover can finish on a different one — the
+            # usage chunk's "stream" block is the authoritative record)
+            headers["x-stream-replica"] = str(int(cache_meta["replica"]))
         return GatewayResponse(
             status=200, headers=headers,
             stream=self._sse_events(rid, model, q, box, cancel_event,
-                                    include_usage, first))
+                                    include_usage, first, cache_meta))
 
     def _sse_events(self, rid, model, q, box, cancel_event,
-                    include_usage, item) -> Iterator[str]:
+                    include_usage, item, cache_meta=None) -> Iterator[str]:
         yield sse_event(chat_chunk(rid, model, "", role="assistant"))
         try:
             while item is not None:
@@ -402,7 +413,7 @@ class StreamGateway:
                     rid, model,
                     prompt_tokens=h.result.n_prompt_tokens,
                     completion_tokens=h.result.n_completion_tokens,
-                    stream_meta=self._meta(h)))
+                    stream_meta=self._meta(h, cache_meta)))
         yield SSE_DONE
 
     def shutdown(self):
@@ -411,12 +422,19 @@ class StreamGateway:
 
     # ------------------------------------------------------------ meta
     @staticmethod
-    def _meta(h) -> dict:
-        return {"tier": h.tier_used, "complexity": h.complexity.name,
+    def _meta(h, cache_meta: dict | None = None) -> dict:
+        meta = {"tier": h.tier_used, "complexity": h.complexity.name,
                 "fallback_depth": h.fallback_depth,
                 "resumed_tokens": h.resumed_tokens,
                 "cost_usd": h.result.cost_usd,
                 "cache_hit_tokens": h.cache_hit_tokens}
+        if cache_meta and "replica" in cache_meta:
+            # fleet serving: replica id + per-replica routed/stolen/
+            # failed-over counters ride the authoritative usage block
+            meta["replica"] = cache_meta["replica"]
+            if "fleet" in cache_meta:
+                meta["fleet"] = cache_meta["fleet"]
+        return meta
 
     @staticmethod
     def _meta_headers(rid: str, meta: dict) -> dict:

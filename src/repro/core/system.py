@@ -30,7 +30,7 @@ from repro.core.relay import Relay
 from repro.core.router import TierRouter
 from repro.core.summarizer import DEFAULT_POLICIES, SummarizerPolicy, TierAwareSummarizer
 from repro.core.tiers import CloudBackend, HPCBackend, LocalBackend, TierSpec
-from repro.serving import ServingEngine
+from repro.serving import EngineFleet, ServingEngine
 
 
 @dataclass
@@ -60,7 +60,8 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                  local_overrides: dict | None = None,
                  prefix_cache_pages: int = 256,
                  speculative: bool = False,
-                 spec_k: int = 4) -> StreamSystem:
+                 spec_k: int = 4, replicas: int = 1,
+                 fleet_overrides: dict | None = None) -> StreamSystem:
     """Everything wired, smoke-scale models (CPU-friendly).
 
     ``scheduler_slots`` sizes each tier engine's session broker (the
@@ -76,7 +77,14 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
     drafts from the LOCAL tier's model — the paper's cross-tier pairing
     — when that model implements ``propose_k`` (recurrent local archs
     fall back to n-gram drafting on the hpc tier too). Output tokens
-    are identical either way; only decode speed changes."""
+    are identical either way; only decode speed changes.
+
+    ``replicas=N`` (N > 1) puts an :class:`~repro.serving.EngineFleet`
+    of N parameter-sharing local engines behind the local tier (and the
+    cloud tier's token source): cache-aware routing, work stealing, and
+    mid-stream failover, all invisible to the tier/gateway contract.
+    ``fleet_overrides`` tunes the fleet (``steal_threshold``,
+    ``tick_timeout_s``, ...)."""
     rng = jax.random.PRNGKey(0)
 
     # --- engines (the per-tier model servers) ---
@@ -97,6 +105,18 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                                  scheduler_slots=scheduler_slots,
                                  prefix_cache_pages=prefix_cache_pages,
                                  **spec_local)
+    local_tier_engine = local_engine
+    if replicas > 1:
+        # N - 1 more replicas sharing replica 0's params (token identity
+        # across failover), all behind one fleet submit surface
+        peers = [ServingEngine(local_cfg, params=local_engine.params,
+                               max_seq=max_seq, rng=rng,
+                               scheduler_slots=scheduler_slots,
+                               prefix_cache_pages=prefix_cache_pages,
+                               **spec_local)
+                 for _ in range(replicas - 1)]
+        local_tier_engine = EngineFleet([local_engine] + peers,
+                                        **(fleet_overrides or {}))
     if speculative and hasattr(local_engine.model, "propose_k"):
         # cross-tier: the local tier's model (params and all) drafts
         # for the hpc-tier verifier
@@ -107,7 +127,7 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                                scheduler_slots=scheduler_slots,
                                prefix_cache_pages=prefix_cache_pages,
                                **spec_hpc)
-    local_engine.warmup()
+    local_tier_engine.warmup()
     hpc_engine.warmup()
 
     # --- data plane ---
@@ -136,10 +156,10 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                           cost_per_1k_prompt=0.003, cost_per_1k_completion=0.015),
     }
     backends = {
-        "local": LocalBackend(specs["local"], local_engine),
+        "local": LocalBackend(specs["local"], local_tier_engine),
         "hpc": HPCBackend(specs["hpc"], endpoint, relay, relay_secret, enc_key),
         "cloud": CloudBackend(specs["cloud"], ttft_s=cloud_ttft_s,
-                              engine=local_engine, fail=cloud_fail),
+                              engine=local_tier_engine, fail=cloud_fail),
     }
 
     # --- routing / summarization / handler ---
@@ -169,5 +189,5 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                         tracker=tracker, relay=relay, endpoint=endpoint,
                         proxy=proxy, globus=globus, api_keys=api_keys,
                         backends=backends,
-                        engines={"local": local_engine, "hpc": hpc_engine},
+                        engines={"local": local_tier_engine, "hpc": hpc_engine},
                         gateway=gateway)

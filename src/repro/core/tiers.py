@@ -38,6 +38,7 @@ from typing import Callable, Optional, Protocol, runtime_checkable
 from repro.core.control_plane import ComputeEndpoint, TaskFailed
 from repro.core.data_plane import (REMOTE_FN_NAME, REMOTE_FN_SOURCE,
                                    consume_tokens, produce_tokens)
+from repro.errors import BackendError, SchedulerStopped
 from repro.core.relay import Relay, new_channel_id
 from repro.serving.sampler import GenerationParams
 
@@ -66,10 +67,6 @@ class TierResult:
     finish_reason: str = "stop"    # "stop" | "length" | "cancelled"
     error: Optional[str] = None
     prefix_hit_tokens: int = 0     # prompt tokens served from the KV cache
-
-
-class BackendError(Exception):
-    pass
 
 
 @runtime_checkable

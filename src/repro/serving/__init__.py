@@ -7,6 +7,7 @@ from repro.serving.pagepool import PagePool, PoolStats, SlotSplicer, chunk_plan
 from repro.serving.prefix_cache import CacheStats, PrefixCache, PrefixLease
 from repro.serving.speculative import (DraftModel, ModelDrafter,
                                        NgramDrafter, SpecStats)
+from repro.serving.fleet import EngineFleet, FleetHandle
 
 __all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
            "GenerationParams", "SamplerConfig",
@@ -14,4 +15,5 @@ __all__ = ["ServingEngine", "GenerationResult", "ByteTokenizer",
            "SessionBroker", "SessionHandle", "SessionResult",
            "PagePool", "PoolStats", "SlotSplicer", "chunk_plan",
            "CacheStats", "PrefixCache", "PrefixLease",
-           "DraftModel", "ModelDrafter", "NgramDrafter", "SpecStats"]
+           "DraftModel", "ModelDrafter", "NgramDrafter", "SpecStats",
+           "EngineFleet", "FleetHandle"]

@@ -29,6 +29,7 @@ import uuid
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from repro.errors import SchedulerStopped
 from repro.serving.sampler import GenerationParams
 from repro.serving.scheduler import ContinuousBatcher, Request, clip_prompt
 
@@ -97,6 +98,10 @@ class SessionBroker:
         self._pending_cancels: list[Request] = []
         self._thread: Optional[threading.Thread] = None
         self._shutdown = False
+        self._kill_exc: Optional[BaseException] = None
+        # Stamped once per scheduler-loop iteration; a fleet health
+        # monitor reads it (GIL-atomic float) to detect a wedged tick.
+        self.last_tick = time.perf_counter()
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, *, max_new_tokens: int = 32,
@@ -180,7 +185,10 @@ class SessionBroker:
         handle._cancel_fn = lambda: self._cancel(req)
         with self._lock:
             if self._shutdown:
-                raise RuntimeError("SessionBroker is shut down")
+                # typed + prompt: enqueueing into a dead mailbox would
+                # leave the caller hanging until its result() timeout,
+                # and gives a fleet circuit breaker nothing to catch
+                raise SchedulerStopped("SessionBroker is shut down")
             self._pending_submits.append(req)
             if self._thread is None:
                 self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -194,6 +202,56 @@ class SessionBroker:
         with self._lock:
             self._pending_cancels.append(req)
         self._work.set()
+
+    # ------------------------------------------------------------ fleet hooks
+    def depth(self) -> int:
+        """Sessions submitted but not yet finished: pending mailbox +
+        admission queue + active decode slots. Stale-tolerant (reads
+        scheduler-owned lists without the tick lock) — a routing hint,
+        not an invariant."""
+        with self._lock:
+            n = len(self._pending_submits)
+        b = self.batcher
+        try:
+            n += len(b.queue) + b._in_flight()
+        except Exception:
+            pass
+        return n
+
+    def kill(self, reason: str = "replica killed"):
+        """Hard-stop the scheduler: reject future submits (typed
+        :class:`SchedulerStopped`) and fail every pending and in-flight
+        session NOW with ``reason``, so their handles complete as
+        ``cancelled`` with an error instead of hanging. Safe to call
+        from any thread, including from an ``on_token`` callback on the
+        scheduler thread itself: the loop drains at its next iteration
+        top (never mid-tick), and there is no self-join."""
+        exc = SchedulerStopped(reason)
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            self._kill_exc = exc
+            thread = self._thread
+        self._work.set()
+        if thread is None or not thread.is_alive():
+            # no live loop to drain for us: fail everything inline
+            self._drain_killed(exc)
+
+    def _drain_killed(self, exc: BaseException):
+        with self._lock:
+            subs, self._pending_submits = self._pending_submits, []
+            self._pending_cancels = []
+        err = f"{type(exc).__name__}: {exc}"
+        for req in subs:
+            # never reached the batcher: complete the handle directly
+            req.error, req.done, req.cancelled = err, True, True
+            if req.on_done:
+                try:
+                    req.on_done(req)
+                except Exception:
+                    pass
+        self._fail_inflight(exc)
 
     # ------------------------------------------------------------ loop
     def _fail_inflight(self, exc: BaseException):
@@ -220,9 +278,18 @@ class SessionBroker:
         while True:
             with self._lock:
                 if self._shutdown:
-                    return
+                    kill_exc = self._kill_exc
+                    if kill_exc is None:
+                        return
+            if self._shutdown:
+                # killed (not gracefully shut down): fail everything so
+                # no handle hangs, then exit the scheduler thread
+                self._drain_killed(kill_exc)
+                return
+            with self._lock:
                 subs, self._pending_submits = self._pending_submits, []
                 cans, self._pending_cancels = self._pending_cancels, []
+            self.last_tick = time.perf_counter()
             try:
                 for req in subs:
                     self.batcher.submit(req)

@@ -162,6 +162,27 @@ class PrefixCache:
             self.stats.hit_tokens += lease.n_cached
         return lease
 
+    def match_len(self, salt: str, ids: list) -> int:
+        """Read-only peek: how many tokens of ``ids`` the tree could
+        serve, WITHOUT pinning, stats, or LRU touches. Same walk and cap
+        as :meth:`begin`. Safe to call from any thread while the
+        scheduler mutates the tree — it only reads dicts (GIL-atomic)
+        and tolerates staleness, which is fine for its one consumer: the
+        fleet router using it as a placement hint."""
+        root = self.roots.get(salt)
+        if root is None:
+            return 0
+        max_pages = max(len(ids) - 1, 0) // self.page
+        node, depth = root, 0
+        while depth < max_pages:
+            i = depth * self.page
+            child = node.children.get(tuple(ids[i:i + self.page]))
+            if child is None:
+                break
+            depth += 1
+            node = child
+        return depth * self.page
+
     def load_into(self, lease: PrefixLease, cache: dict, batch_idx: int = 0):
         """Splice the lease's matched pages into ``cache`` as the slot's
         token prefix (pos advances to the cached length)."""

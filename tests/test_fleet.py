@@ -1,0 +1,295 @@
+"""EngineFleet: cache-aware routing, work stealing, and mid-stream
+failover across data-parallel ServingEngine replicas.
+
+The fleet is a drop-in for the engine ``submit()`` surface, so the
+contract under test is the client's: streams are token-identical to a
+single engine with the same parameters, a warm prefix routes the
+session to the replica that owns the KV (never round-robin), sessions
+with a prefix match above the steal threshold are never moved, and a
+replica dying mid-stream resumes elsewhere with no duplicated or
+dropped token — greedy and seeded alike. The broker-level satellite
+rides along: ``submit()`` on a stopped scheduler raises a typed
+:class:`SchedulerStopped` (a ``BackendError``), which is also what the
+fleet surfaces when every replica is down and what the gateway turns
+into a clean 502.
+"""
+
+import threading
+import types
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import build_system
+from repro.core.metrics import FleetMetrics
+from repro.core.sse import parse_sse
+from repro.errors import BackendError, SchedulerStopped
+from repro.serving import EngineFleet, ServingEngine
+from repro.serving.fleet import _FleetSession
+
+
+def _cfg():
+    return get_smoke_config("minitron-8b").replace(vocab_size=300,
+                                                   vocab_pad_to=64)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    f = EngineFleet.build(_cfg(), replicas=2, max_seq=96, scheduler_slots=4,
+                          breaker_cooldown_s=0.5)
+    f.warmup()
+    yield f
+    f.shutdown()
+
+
+def _revive(fleet, idx):
+    """Bring a killed replica back: a fresh broker on the next submit."""
+    fleet.engines[idx].shutdown()
+    fleet.replicas[idx].open_until = 0.0
+    fleet.replicas[idx].dead = False
+    fleet.replicas[idx].failures = 0
+
+
+# --------------------------------------------------------------- identity
+def test_fleet_stream_matches_single_engine(fleet):
+    """Shared params + position-stable prefill: whichever replica serves
+    the session, the stream equals the solo engine's output."""
+    prompt = "fleet identity check prompt"
+    solo = fleet.engines[0].generate(prompt, max_new_tokens=8)
+    streamed = []
+    h = fleet.submit(prompt, max_new_tokens=8,
+                     on_token=lambda t, s: streamed.append(t))
+    res = h.result(timeout=60)
+    assert res.error is None and not res.cancelled
+    assert res.tokens == solo.tokens
+    assert streamed == solo.tokens
+
+
+def test_cold_sessions_spread_across_replicas(fleet):
+    """Distinct cold prompts submitted back-to-back land on both
+    replicas (least-loaded dispatch), and every stream completes."""
+    handles = [fleet.submit(f"cold session number {i} padding words",
+                            max_new_tokens=8) for i in range(6)]
+    results = [h.result(timeout=60) for h in handles]
+    assert all(r.error is None and not r.cancelled for r in results)
+    assert {h.replica for h in handles} == {0, 1}
+    snap = fleet.metrics.snapshot()
+    assert sum(snap["routed"]) >= 6 and len(snap["routed"]) == 2
+
+
+# ---------------------------------------------------------------- routing
+def test_warm_prefix_routes_to_owning_replica():
+    """A 512-token warm prefix pulls the session onto the replica whose
+    radix tree holds the pages — even when the other replica is idle and
+    would win every load tie-break."""
+    # clip_prompt budgets the power-of-two BUCKET of the prompt length:
+    # a 514-token prompt charges 1024, so max_seq must cover that bucket
+    # for the prefix to survive admission unclipped
+    f = EngineFleet.build(_cfg(), replicas=2, max_seq=1088,
+                          scheduler_slots=4, prefix_cache_pages=272)
+    try:
+        f.warmup()
+        prefix = [i % 250 + 2 for i in range(512)]
+        salt = "tenant-a"
+        # warm replica 1 directly, bypassing fleet routing: replica 0
+        # stays cold AND idle, so only the prefix match can beat it
+        r1 = f.engines[1].submit(prefix + [7, 8], max_new_tokens=4,
+                                 cache_salt=salt)
+        assert r1.result(timeout=120).error is None
+        assert f.replicas[1].match_len(salt, prefix + [9, 9]) == 512
+        assert f.replicas[0].match_len(salt, prefix + [9, 9]) == 0
+
+        h = f.submit(prefix + [11, 12], max_new_tokens=4, cache_salt=salt)
+        res = h.result(timeout=120)
+        assert res.error is None
+        assert h.replica == 1                    # owner, not lowest idx
+        assert h.prefix_hit_tokens == 512
+        route = [d for d in f.metrics.decisions() if d.kind == "route"][-1]
+        assert route.replica == 1 and route.match_tokens == 512
+
+        # same prefix, different tenant: salted tree -> no match, and the
+        # session falls back to least-loaded (idle replica 0)
+        h2 = f.submit(prefix + [11, 12], max_new_tokens=4,
+                      cache_salt="tenant-b")
+        assert h2.result(timeout=120).error is None
+        assert h2.prefix_hit_tokens == 0
+    finally:
+        f.shutdown()
+
+
+# ----------------------------------------------------------- work stealing
+def test_steal_pass_never_moves_warm_sessions():
+    """The steal invariant, isolated from scheduler timing: an
+    overloaded replica's waiting sessions move only when their prefix
+    match is at or below the threshold; warm sessions stay with their
+    KV; started sessions are not candidates at all."""
+    eng = lambda: types.SimpleNamespace(page=16, scheduler=None,
+                                        prefix_cache=None, scheduler_slots=4)
+    f = EngineFleet([eng(), eng()], steal_threshold=16)
+    f.replicas[0].depth = lambda: 8              # overloaded (> 4 slots)
+    f.replicas[1].depth = lambda: 0              # idle
+    stolen = []
+    f._steal = lambda sess, src, dst: stolen.append(sess.rid) or True
+
+    def sess(rid, match, started=False):
+        s = _FleetSession(rid, [1, 2], None, "", 0.0, None, None, None)
+        s.replica, s.match_tokens, s.started = 0, match, started
+        return s
+
+    f._sessions = {s.rid: s for s in (
+        sess("cold", 0), sess("edge", 16), sess("warm", 32),
+        sess("started", 0, started=True))}
+    f._steal_pass()
+    assert "warm" not in stolen                  # match 32 > threshold 16
+    assert "started" not in stolen               # already streaming
+    assert "cold" in stolen and "edge" in stolen # match <= threshold move
+
+
+def test_steal_threshold_defaults_to_one_page(fleet):
+    assert fleet.steal_threshold == fleet.page
+
+
+# --------------------------------------------------------------- failover
+def _run_with_kill(fleet, prompt, params, killed):
+    """Submit and kill the serving replica's broker after the 3rd
+    streamed token; returns (handle, result, streamed_ids)."""
+    streamed, state = [], {}
+
+    def on_tok(tid, s):
+        streamed.append(tid)
+        h = state.get("h")
+        if not killed and len(streamed) >= 3 and h is not None:
+            killed.append(h.replica)
+            fleet.engines[h.replica].scheduler.kill("test kill")
+
+    h = state["h"] = fleet.submit(prompt, params=params, on_token=on_tok)
+    return h, h.result(timeout=120), streamed
+
+
+@pytest.mark.parametrize("params", [
+    {"max_tokens": 16},                                      # greedy
+    {"max_tokens": 16, "seed": 1234, "temperature": 0.9},    # seeded
+], ids=["greedy", "seeded"])
+def test_kill_mid_stream_failover_is_token_identical(fleet, params):
+    """The acceptance check: a replica dying mid-stream resumes on the
+    survivor and the client stream is bitwise the unfaulted stream — no
+    duplicate, no gap — because the resumed attempt replays from the
+    prefix and the fleet swallows the first ``delivered`` tokens."""
+    prompt = f"failover identity prompt {params.get('seed', 'greedy')}"
+    ref = fleet.submit(prompt, params=dict(params)).result(timeout=120)
+    assert ref.error is None and len(ref.tokens) == 16
+
+    killed = []
+    h, res, streamed = _run_with_kill(fleet, prompt, dict(params), killed)
+    try:
+        assert res.error is None and not res.cancelled
+        assert h.attempts >= 2 and killed and killed[0] != h.replica
+        assert streamed == ref.tokens            # per-token stream identical
+        assert res.tokens == ref.tokens          # final result identical
+        assert any(d.kind == "failover"
+                   for d in fleet.metrics.decisions())
+    finally:
+        _revive(fleet, killed[0])
+
+
+def test_all_replicas_down_raises_typed_error(fleet):
+    """Every broker dead -> submit() raises the typed SchedulerStopped
+    (a BackendError), which the tier chain can turn into fallback."""
+    for e in fleet.engines:
+        e.submit("ensure broker exists", max_new_tokens=1).result(timeout=60)
+        e.scheduler.kill("test: all down")
+    try:
+        with pytest.raises(SchedulerStopped):
+            fleet.submit("nowhere to go", max_new_tokens=4)
+        assert issubclass(SchedulerStopped, BackendError)
+    finally:
+        for i in range(len(fleet.engines)):
+            _revive(fleet, i)
+
+
+# ------------------------------------------------------- broker satellite
+def test_broker_submit_after_shutdown_raises_scheduler_stopped():
+    e = ServingEngine(_cfg(), max_seq=96)
+    e.submit("start the broker", max_new_tokens=1).result(timeout=60)
+    b = e.scheduler
+    b.shutdown()
+    with pytest.raises(SchedulerStopped):
+        b.submit("too late", max_new_tokens=1)
+    e.shutdown()
+
+
+def test_broker_kill_fails_pending_and_inflight():
+    """kill() must fail pending submits AND in-flight sessions with the
+    kill reason — a wedged replica's clients get errors, not hangs."""
+    e = ServingEngine(_cfg(), max_seq=96, scheduler_slots=2)
+    hs = [e.submit(f"kill drain test {i}", max_new_tokens=32)
+          for i in range(4)]
+    e.scheduler.kill("wedged replica")
+    for h in hs:
+        res = h.result(timeout=30)               # no hang
+        assert res.cancelled and "wedged replica" in str(res.error)
+    e.shutdown()
+
+
+# --------------------------------------------------------------- metrics
+def test_fleet_metrics_decision_log():
+    m = FleetMetrics(2)
+    m.record("route", 0, rid="a", match_tokens=0, queue_depth=1)
+    m.record("steal", 1, rid="a", match_tokens=0, queue_depth=0)
+    m.record("failover", 1, rid="b", match_tokens=32, queue_depth=2)
+    snap = m.snapshot()
+    assert snap == {"replicas": 2, "routed": [1, 0], "stolen": [0, 1],
+                    "failed_over": [0, 1]}
+    kinds = [d.kind for d in m.decisions()]
+    assert kinds == ["route", "steal", "failover"]
+    assert m.decisions()[-1].match_tokens == 32
+
+
+# --------------------------------------------------- gateway integration
+@pytest.fixture(scope="module")
+def system2():
+    """Two local replicas; HPC and cloud are down so the local fleet is
+    the only live tier (the 502 test needs no fallback to succeed)."""
+    return build_system(replicas=2, hpc_fail=True, cloud_fail=True,
+                        dispatch_latency_s=0.0, max_seq=160)
+
+
+def test_gateway_replica_header_and_fleet_meta(system2):
+    tok = system2.globus.issue_token("fleet@uic.edu")
+    resp = system2.gateway.handle_chat_completions(
+        {"model": "stream-local", "max_tokens": 4, "stream": True,
+         "stream_options": {"include_usage": True},
+         "messages": [{"role": "user", "content": "which replica?"}]},
+        bearer=tok)
+    assert resp.status == 200
+    assert resp.headers["x-stream-replica"] in ("0", "1")
+    usage = parse_sse("".join(resp.stream))[-1]
+    assert usage["stream"]["replica"] in (0, 1)
+    assert len(usage["stream"]["fleet"]["routed"]) == 2
+    # pool headers aggregate BOTH replicas' pools
+    assert int(resp.headers["x-stream-pool-capacity"]) > 0
+
+    nresp = system2.gateway.handle_chat_completions(
+        {"model": "stream-local", "max_tokens": 4, "stream": False,
+         "messages": [{"role": "user", "content": "non-stream replica"}]},
+        bearer=tok)
+    assert nresp.status == 200
+    assert nresp.body["stream"]["replica"] in (0, 1)
+
+
+def test_gateway_502_when_every_replica_down(system2):
+    """Keep this LAST for the fixture: it kills both local brokers.
+    With HPC and cloud already down the fallback chain is exhausted and
+    the gateway answers a clean 502, not a hang or a 500."""
+    flt = system2.engines["local"]
+    assert isinstance(flt, EngineFleet)
+    for e in flt.engines:
+        e.submit("ensure broker", max_new_tokens=1).result(timeout=60)
+        e.scheduler.kill("test: replica down")
+    tok = system2.globus.issue_token("down@uic.edu")
+    resp = system2.gateway.handle_chat_completions(
+        {"model": "stream-local", "max_tokens": 4, "stream": False,
+         "messages": [{"role": "user", "content": "anyone home?"}]},
+        bearer=tok)
+    assert resp.status == 502
+    assert resp.body["error"]["type"] == "upstream_error"
