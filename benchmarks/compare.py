@@ -42,6 +42,8 @@ DIRECTIONS = {
     "longcontext_tok_s_flatness": "higher",
     "longcontext_occupancy_ratio": "lower",
     "fleet_scaling_efficiency": "higher",
+    "kv_pool_bytes_ratio": "lower",
+    "kv_quant_logit_err": "lower",
 }
 
 EPS = 1e-9

@@ -43,7 +43,13 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
     * ``fleet_scaling_efficiency`` — 2-replica EngineFleet aggregate
       tok/s at 64 concurrent sessions over 2x the single-replica
       aggregate (failover stream identity is asserted in-run; the
-      efficiency floor in baselines.json assumes a multi-core runner).
+      efficiency floor in baselines.json assumes a multi-core runner);
+    * ``kv_pool_bytes_ratio`` / ``kv_quant_logit_err`` — int8 page-pool
+      device bytes over fp32 (f32 amax-scale sidecars included; the
+      quantized-KV capacity headline) and the worst teacher-forced
+      |logit| error across quantized dtypes vs the fp32 pool
+      (benchmarks/kv_quant.py; int8 greedy-token identity on GQA is
+      asserted in-run).
     """
     t0 = time.perf_counter()
 
@@ -72,6 +78,13 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
     r_fl = concurrency.run_fleet(replicas=2, sessions=64, tokens=8,
                                  repeats=2, quiet=True)
 
+    from benchmarks import kv_quant
+    r_kv = kv_quant.run_pool_and_decode(n_sessions=4, tokens=12, repeats=1,
+                                        quiet=True)
+    r_le = kv_quant.run_logit_error(seq_tokens=48, quiet=True)
+    assert r_kv["int8"]["tokens0"] == r_kv["fp32"]["tokens0"], \
+        "int8 pages lost greedy-token identity on the GQA family"
+
     metrics = {
         "bg_decode_retention": r_int["retention"],
         "agg_speedup_16_sessions": r_cc["summary"]["speedup_at_max"],
@@ -85,6 +98,8 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
         "longcontext_occupancy_ratio": r_lc["occupancy_ratio"],
         "fleet_scaling_efficiency":
             r_fl["summary"]["fleet_scaling_efficiency"],
+        "kv_pool_bytes_ratio": r_kv["pool_bytes_ratio"],
+        "kv_quant_logit_err": r_le["worst"],
     }
     out = {
         "metrics": metrics,
@@ -106,6 +121,12 @@ def run_ci(out_path: str = "BENCH_ci.json") -> dict:
             "fleet_failover_identical":
                 r_fl["summary"]["failover_identical_greedy"]
                 and r_fl["summary"]["failover_identical_seeded"],
+            "kv_quant_tok_s": {dt: r_kv[dt]["agg_tok_s"]
+                               for dt in kv_quant.KV_DTYPES},
+            "kv_pool_bytes": {dt: r_kv[dt]["pool_bytes"]
+                              for dt in kv_quant.KV_DTYPES},
+            "kv_quant_logit_err_per_dtype": r_le["max_logit_err"],
+            "kv_quant_int8_token_identical": True,
         },
         "wall_s": round(time.perf_counter() - t0, 1),
     }

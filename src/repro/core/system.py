@@ -61,7 +61,9 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                  prefix_cache_pages: int = 256,
                  speculative: bool = False,
                  spec_k: int = 4, replicas: int = 1,
-                 fleet_overrides: dict | None = None) -> StreamSystem:
+                 fleet_overrides: dict | None = None,
+                 kv_dtype: str = "fp32",
+                 quantize_mlp: bool = False) -> StreamSystem:
     """Everything wired, smoke-scale models (CPU-friendly).
 
     ``scheduler_slots`` sizes each tier engine's session broker (the
@@ -84,7 +86,15 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
     cloud tier's token source): cache-aware routing, work stealing, and
     mid-stream failover, all invisible to the tier/gateway contract.
     ``fleet_overrides`` tunes the fleet (``steal_threshold``,
-    ``tick_timeout_s``, ...)."""
+    ``tick_timeout_s``, ...).
+
+    ``kv_dtype`` ("fp32" | "int8" | "fp8_e4m3") selects the paged KV
+    pool's storage dtype on every tier engine — quantized pages halve
+    (or better) KV bytes per device with in-kernel dequant at read time;
+    non-paged pools always stay fp32. ``quantize_mlp=True`` serves both
+    tiers with W4A16 AWQ-quantized MLP + attention-output weights (the
+    paper's Qwen-72B-AWQ HPC tier); fleet replicas share replica-0's
+    quantized params."""
     rng = jax.random.PRNGKey(0)
 
     # --- engines (the per-tier model servers) ---
@@ -101,10 +111,24 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
     if speculative:
         spec_local = {"speculative": "ngram", "spec_k": spec_k}
         spec_hpc = dict(spec_local)
-    local_engine = ServingEngine(local_cfg, max_seq=max_seq, rng=rng,
+    local_params = hpc_params = None
+    if quantize_mlp:
+        # W4A16 both tiers: init the params the engines would have built
+        # themselves, quantize once, hand the quantized tree to every
+        # constructor (fleet peers inherit via params=local_engine.params
+        # below). group 64 fits smoke-scale contraction dims; weights
+        # that don't divide stay dense.
+        from repro.models import build_model
+        from repro.serving.quantize import quantize_mlp_tree
+        local_params = quantize_mlp_tree(build_model(local_cfg).init(rng),
+                                         group_size=64)
+        hpc_params = quantize_mlp_tree(build_model(hpc_cfg).init(rng),
+                                       group_size=64)
+    local_engine = ServingEngine(local_cfg, params=local_params,
+                                 max_seq=max_seq, rng=rng,
                                  scheduler_slots=scheduler_slots,
                                  prefix_cache_pages=prefix_cache_pages,
-                                 **spec_local)
+                                 kv_dtype=kv_dtype, **spec_local)
     local_tier_engine = local_engine
     if replicas > 1:
         # N - 1 more replicas sharing replica 0's params (token identity
@@ -113,7 +137,7 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
                                max_seq=max_seq, rng=rng,
                                scheduler_slots=scheduler_slots,
                                prefix_cache_pages=prefix_cache_pages,
-                               **spec_local)
+                               kv_dtype=kv_dtype, **spec_local)
                  for _ in range(replicas - 1)]
         local_tier_engine = EngineFleet([local_engine] + peers,
                                         **(fleet_overrides or {}))
@@ -123,10 +147,11 @@ def build_system(*, relay_enabled: bool = True, encrypt: bool = True,
         spec_hpc = {"drafter_cfg": local_cfg,
                     "drafter_params": local_engine.params,
                     "spec_k": spec_k}
-    hpc_engine = ServingEngine(hpc_cfg, max_seq=max_seq, rng=rng,
+    hpc_engine = ServingEngine(hpc_cfg, params=hpc_params,
+                               max_seq=max_seq, rng=rng,
                                scheduler_slots=scheduler_slots,
                                prefix_cache_pages=prefix_cache_pages,
-                               **spec_hpc)
+                               kv_dtype=kv_dtype, **spec_hpc)
     local_tier_engine.warmup()
     hpc_engine.warmup()
 

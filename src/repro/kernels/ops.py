@@ -82,24 +82,29 @@ def decode_attention(q, k, v, *, kv_len, scale=None, logit_soft_cap=0.0,
 
 def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
                     logit_soft_cap=0.0, impl="ref", interpret=False,
-                    pos_offset=None):
+                    pos_offset=None, k_scales=None, v_scales=None):
     """Paged decode attention: q (B,Hq,1,D) against pooled KV pages
     (P,Hkv,page,D) addressed through per-slot block tables (B,n_pages).
     The ref path gathers the pages into a contiguous view; the Pallas
     path DMAs pages inside the kernel via scalar-prefetched tables.
     ``pos_offset`` (scalar or (B,)) is the per-slot count of tokens
     rolled out of the window: the block table maps only surviving
-    pages, so the slot-space KV length is kv_len - pos_offset."""
+    pages, so the slot-space KV length is kv_len - pos_offset.
+    ``k_scales``/``v_scales`` ((P,Hkv,page) float32) mark the pool as
+    quantized: both impls dequantize per page position before the
+    attention math (in-register for the Pallas path)."""
     if _resolve(impl) == "ref":
         return _ref.paged_attention(q, k_pages, v_pages,
                                     block_tables=block_tables, kv_len=kv_len,
                                     scale=scale, logit_soft_cap=logit_soft_cap,
-                                    pos_offset=pos_offset)
+                                    pos_offset=pos_offset,
+                                    k_scales=k_scales, v_scales=v_scales)
     from repro.kernels import paged_attention as _k
     return _k.paged_attention(q, k_pages, v_pages, block_tables=block_tables,
                               kv_len=kv_len, scale=scale,
                               logit_soft_cap=logit_soft_cap, interpret=interpret,
-                              pos_offset=pos_offset)
+                              pos_offset=pos_offset,
+                              k_scales=k_scales, v_scales=v_scales)
 
 
 def gather_kv_pages(pages, block_tables):
@@ -108,6 +113,29 @@ def gather_kv_pages(pages, block_tables):
     chunked-prefill and MLA paged paths, which reuse the contiguous
     attention math on the gathered view."""
     return _ref.gather_kv_pages(pages, block_tables)
+
+
+def gather_dequant_kv_pages(pages, scales, block_tables):
+    """Quantized-pool variant of :func:`gather_kv_pages`: gathers pages
+    and their per-position scale sidecar, returns the dequantized
+    float32 contiguous view."""
+    return _ref.gather_dequant_kv_pages(pages, scales, block_tables)
+
+
+def kv_qmax(dtype):
+    """Max magnitude representable by a quantized-KV dtype (None if the
+    dtype is not a quantized KV format)."""
+    return _ref.kv_qmax(dtype)
+
+
+def quantize_kv(x, dtype):
+    """Symmetric amax quantization over the last axis -> (q, scale)."""
+    return _ref.quantize_kv(x, dtype)
+
+
+def dequantize_kv(q, scale):
+    """Inverse of quantize_kv -> float32."""
+    return _ref.dequantize_kv(q, scale)
 
 
 # -- mamba2 ssd ------------------------------------------------------------

@@ -30,7 +30,8 @@ NEG_INF = -1e30
 
 
 def _paged_kernel(bt_ref, kvlen_ref, posoff_ref, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, scale, page, n_kv_heads, soft_cap):
+                  acc_ref, m_ref, l_ref, *, scale, page, n_kv_heads, soft_cap,
+                  ks_ref=None, vs_ref=None):
     bh = pl.program_id(0)
     ip = pl.program_id(1)
     np_ = pl.num_programs(1)
@@ -54,6 +55,11 @@ def _paged_kernel(bt_ref, kvlen_ref, posoff_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32)            # (G, D)
         k = k_ref[0, 0].astype(jnp.float32)         # (page, D)
         v = v_ref[0, 0].astype(jnp.float32)
+        if ks_ref is not None:
+            # quantized pool page: dequant in-register with the page's
+            # per-position scales — the pool is never widened in HBM
+            k = k * ks_ref[0, 0][:, None]
+            v = v * vs_ref[0, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if soft_cap > 0.0:
@@ -76,11 +82,20 @@ def _paged_kernel(bt_ref, kvlen_ref, posoff_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_kernel_quant(bt_ref, kvlen_ref, posoff_ref, q_ref, k_ref, v_ref,
+                        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref, **kw):
+    _paged_kernel(bt_ref, kvlen_ref, posoff_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, ks_ref=ks_ref, vs_ref=vs_ref, **kw)
+
+
 def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
-                    logit_soft_cap=0.0, interpret=False, pos_offset=None):
+                    logit_soft_cap=0.0, interpret=False, pos_offset=None,
+                    k_scales=None, v_scales=None):
     """q (B,Hq,1,D); k_pages,v_pages (P,Hkv,page,D);
     block_tables (B,n_pages) int32; kv_len scalar or (B,);
-    pos_offset optional scalar or (B,) rolled-out token counts
+    pos_offset optional scalar or (B,) rolled-out token counts;
+    k_scales,v_scales optional (P,Hkv,page) float32 sidecars for
+    quantized pools (dequant happens inside the page loop)
     -> (B,Hq,1,D)."""
     B, Hq, _, D = q.shape
     P, Hkv, page, _ = k_pages.shape
@@ -103,16 +118,32 @@ def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
         pid = bt_ref[(bh // Hkv) * n_pages + ip]
         return (pid, bh % Hkv, 0, 0)
 
-    kernel = functools.partial(_paged_kernel, scale=scale, page=page,
-                               n_kv_heads=Hkv, soft_cap=logit_soft_cap)
+    def scale_map(bh, ip, bt_ref, kvlen_ref, posoff_ref):
+        pid = bt_ref[(bh // Hkv) * n_pages + ip]
+        return (pid, bh % Hkv, 0)
+
+    quant = k_scales is not None
+    in_specs = [
+        pl.BlockSpec((1, G, D), q_map),
+        pl.BlockSpec((1, 1, page, D), kv_map),
+        pl.BlockSpec((1, 1, page, D), kv_map),
+    ]
+    operands = [qf, k_pages, v_pages]
+    if quant:
+        # the scale sidecar rides the same scalar-prefetched block-table
+        # steering as the pages themselves: one (1, 1, page) block per
+        # grid step, landing next to its page for the in-kernel dequant
+        in_specs += [pl.BlockSpec((1, 1, page), scale_map),
+                     pl.BlockSpec((1, 1, page), scale_map)]
+        operands += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
+    kernel = functools.partial(
+        _paged_kernel_quant if quant else _paged_kernel,
+        scale=scale, page=page, n_kv_heads=Hkv, soft_cap=logit_soft_cap)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B * Hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, G, D), q_map),
-            pl.BlockSpec((1, 1, page, D), kv_map),
-            pl.BlockSpec((1, 1, page, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, G, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((G, D), jnp.float32),
@@ -125,5 +156,5 @@ def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * Hkv, G, D), q.dtype),
         interpret=interpret,
-    )(bt, kv_len, pos_offset, qf, k_pages, v_pages)
+    )(bt, kv_len, pos_offset, *operands)
     return out.reshape(B, Hq, D)[:, :, None, :]

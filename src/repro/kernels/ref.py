@@ -104,8 +104,67 @@ def gather_kv_pages(pages, block_tables):
     return g.reshape(*g.shape[:-3], n * page, g.shape[-1])
 
 
+# ---------------------------------------------------------------------------
+# KV quantization (int8 / fp8 paged pools)
+# ---------------------------------------------------------------------------
+
+
+def kv_qmax(dtype):
+    """Max representable magnitude for a quantized-KV storage dtype, or
+    ``None`` if ``dtype`` is not a quantized KV format."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.int8):
+        return 127.0
+    if dt == jnp.dtype(jnp.float8_e4m3fn):
+        return 448.0
+    return None
+
+
+def quantize_kv(x, dtype):
+    """Symmetric per-vector amax quantization over the last axis.
+
+    x: (..., D) any float dtype. Returns (q, scale): ``q`` is ``x``
+    stored in ``dtype`` (int8 or fp8_e4m3), ``scale`` is (...,) float32
+    with ``dequantize_kv(q, scale) ~= x``. All-zero vectors get scale 0
+    and quantize to exact zeros — dequant reproduces them bit-exactly,
+    which keeps untouched pool pages (the trash page included) at 0.
+    """
+    qmax = kv_qmax(dtype)
+    assert qmax is not None, f"not a quantized KV dtype: {dtype}"
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = xf / safe[..., None]
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = y.astype(dtype)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of :func:`quantize_kv`: (..., D) values + (...,) scales
+    -> float32 (..., D)."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def gather_dequant_kv_pages(pages, scales, block_tables):
+    """Gather quantized pool pages into the contiguous per-slot view and
+    dequantize with the per-position scale sidecar.
+
+    pages: quantized pool buffer, page-token axis second-to-last;
+    scales: float32 sidecar, same shape minus the trailing feature axis
+    (one scale per written position per kv-head). Returns float32.
+    """
+    g = gather_kv_pages(pages, block_tables)
+    s = gather_kv_pages(scales[..., None], block_tables)
+    return g.astype(jnp.float32) * s.astype(jnp.float32)
+
+
 def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
-                    logit_soft_cap: float = 0.0, pos_offset=None):
+                    logit_soft_cap: float = 0.0, pos_offset=None,
+                    k_scales=None, v_scales=None):
     """Paged decode attention, pure-jnp oracle: gather the block-table
     row into a contiguous (B, Hkv, S, D) view, then run the standard
     decode attention. The Pallas kernel performs the same gather
@@ -116,12 +175,20 @@ def paged_attention(q, k_pages, v_pages, *, block_tables, kv_len, scale=None,
     pos_offset: optional scalar or (B,) — tokens rolled out of the
     slot's window. The block table holds only the surviving pages, so
     the slot-space KV length is ``kv_len - pos_offset``.
+    k_scales, v_scales: optional (P, Hkv, page) float32 sidecars for
+    quantized pools — when given, pages dequantize as
+    ``page.astype(f32) * scale`` and the math runs in float32, matching
+    the in-kernel dequant of the Pallas path.
     """
     kv_len = jnp.asarray(kv_len)
     if pos_offset is not None:
         kv_len = kv_len - jnp.asarray(pos_offset)
-    k = gather_kv_pages(k_pages, block_tables).astype(q.dtype)
-    v = gather_kv_pages(v_pages, block_tables).astype(q.dtype)
+    if k_scales is not None:
+        k = gather_dequant_kv_pages(k_pages, k_scales, block_tables)
+        v = gather_dequant_kv_pages(v_pages, v_scales, block_tables)
+    else:
+        k = gather_kv_pages(k_pages, block_tables).astype(q.dtype)
+        v = gather_kv_pages(v_pages, block_tables).astype(q.dtype)
     return decode_attention(q, k, v, kv_len=kv_len, scale=scale,
                             logit_soft_cap=logit_soft_cap)
 

@@ -22,11 +22,19 @@ def main():
     ap.add_argument("--prefix-pages", type=int, default=256,
                     help="KV page-pool budget per tier engine (0 disables "
                          "prefix caching)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=("fp32", "int8", "fp8_e4m3"),
+                    help="paged KV pool storage dtype; quantized modes "
+                         "halve+ KV bytes with in-kernel dequant")
+    ap.add_argument("--quantize-mlp", action="store_true",
+                    help="serve W4A16 AWQ-quantized MLP/attn-out weights "
+                         "on both tiers")
     args = ap.parse_args()
 
     print("building STREAM system (three tiers + relay + proxy)...")
     sys_ = build_system(hpc_arch=args.arch, dispatch_latency_s=0.05, max_seq=256,
-                        prefix_cache_pages=args.prefix_pages)
+                        prefix_cache_pages=args.prefix_pages,
+                        kv_dtype=args.kv_dtype, quantize_mlp=args.quantize_mlp)
 
     queries = [
         "What is the capital of France?",

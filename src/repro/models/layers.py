@@ -204,7 +204,14 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
 
     new_cache = None
     if cache is not None and block_tables is not None:
-        ck, cv = cache                      # pool pages (P, Hkv, page, D)
+        # quantized pools carry per-position amax scales as two extra
+        # cache leaves: (ck, cv, ks, vs) with ks/vs (P, Hkv, page) f32.
+        # Writes quantize from the incoming block; reads dequantize in
+        # the paged kernel (decode) or the gathered view (chunk/verify).
+        ck, cv, *qs = cache                 # pool pages (P, Hkv, page, D)
+        quant = bool(qs)
+        if quant:
+            ks, vs = qs
         page = ck.shape[2]
         if S == 1:  # paged decode: scatter to (page id, offset) per slot
             pos = jnp.asarray(cache_index).reshape(-1)            # (B,)
@@ -215,27 +222,54 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
             pid = jnp.take_along_axis(block_tables, (spos // page)[:, None],
                                       axis=1)[:, 0]
             off = spos % page
-            ck = ck.at[pid, :, off, :].set(k[:, :, 0, :].astype(ck.dtype))
-            cv = cv.at[pid, :, off, :].set(v[:, :, 0, :].astype(cv.dtype))
-            new_cache = (ck, cv)
-            out = ops.paged_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                                      block_tables=block_tables,
-                                      kv_len=pos + 1, pos_offset=poff,
-                                      impl=impl,
-                                      logit_soft_cap=logit_soft_cap)
+            if quant:
+                kq, ksc = ops.quantize_kv(k[:, :, 0, :], ck.dtype)
+                vq, vsc = ops.quantize_kv(v[:, :, 0, :], cv.dtype)
+                ck = ck.at[pid, :, off, :].set(kq)
+                cv = cv.at[pid, :, off, :].set(vq)
+                ks = ks.at[pid, :, off].set(ksc)
+                vs = vs.at[pid, :, off].set(vsc)
+                new_cache = (ck, cv, ks, vs)
+                out = ops.paged_attention(q, ck, cv,
+                                          block_tables=block_tables,
+                                          kv_len=pos + 1, pos_offset=poff,
+                                          impl=impl,
+                                          logit_soft_cap=logit_soft_cap,
+                                          k_scales=ks, v_scales=vs)
+            else:
+                ck = ck.at[pid, :, off, :].set(k[:, :, 0, :].astype(ck.dtype))
+                cv = cv.at[pid, :, off, :].set(v[:, :, 0, :].astype(cv.dtype))
+                new_cache = (ck, cv)
+                out = ops.paged_attention(q, ck.astype(q.dtype),
+                                          cv.astype(q.dtype),
+                                          block_tables=block_tables,
+                                          kv_len=pos + 1, pos_offset=poff,
+                                          impl=impl,
+                                          logit_soft_cap=logit_soft_cap)
         elif jnp.ndim(cache_index) == 0:
             # paged chunked prefill: chunk_plan keeps chunks in one page
             assert chunked and B == 1
             si = (cache_index if pos_offset is None
                   else cache_index - jnp.asarray(pos_offset).reshape(()))
             pid = block_tables[0, si // page]
-            ck = jax.lax.dynamic_update_slice(
-                ck, k.astype(ck.dtype), (pid, 0, si % page, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cv, v.astype(cv.dtype), (pid, 0, si % page, 0))
-            new_cache = (ck, cv)
-            gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
-            gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
+            if quant:
+                kq, ksc = ops.quantize_kv(k, ck.dtype)   # scale (1, Hkv, S)
+                vq, vsc = ops.quantize_kv(v, cv.dtype)
+                ck = jax.lax.dynamic_update_slice(ck, kq, (pid, 0, si % page, 0))
+                cv = jax.lax.dynamic_update_slice(cv, vq, (pid, 0, si % page, 0))
+                ks = jax.lax.dynamic_update_slice(ks, ksc, (pid, 0, si % page))
+                vs = jax.lax.dynamic_update_slice(vs, vsc, (pid, 0, si % page))
+                new_cache = (ck, cv, ks, vs)
+                gk = ops.gather_dequant_kv_pages(ck, ks, block_tables)
+                gv = ops.gather_dequant_kv_pages(cv, vs, block_tables)
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (pid, 0, si % page, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (pid, 0, si % page, 0))
+                new_cache = (ck, cv)
+                gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
+                gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
             out = ops.chunk_attention(q, gk, gv, q_offset=si,
                                       kv_len=si + S, impl=impl,
                                       logit_soft_cap=logit_soft_cap)
@@ -256,11 +290,22 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
                                       axis=1)
             pid = jnp.where(valid, pid, 0)
             off = jnp.where(valid, pos2d % page, 0)
-            ck = ck.at[pid, :, off, :].set(k.transpose(0, 2, 1, 3).astype(ck.dtype))
-            cv = cv.at[pid, :, off, :].set(v.transpose(0, 2, 1, 3).astype(cv.dtype))
-            new_cache = (ck, cv)
-            gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
-            gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
+            if quant:
+                kq, ksc = ops.quantize_kv(k.transpose(0, 2, 1, 3), ck.dtype)
+                vq, vsc = ops.quantize_kv(v.transpose(0, 2, 1, 3), cv.dtype)
+                ck = ck.at[pid, :, off, :].set(kq)    # scale (B, S, Hkv)
+                cv = cv.at[pid, :, off, :].set(vq)
+                ks = ks.at[pid, :, off].set(ksc)
+                vs = vs.at[pid, :, off].set(vsc)
+                new_cache = (ck, cv, ks, vs)
+                gk = ops.gather_dequant_kv_pages(ck, ks, block_tables)
+                gv = ops.gather_dequant_kv_pages(cv, vs, block_tables)
+            else:
+                ck = ck.at[pid, :, off, :].set(k.transpose(0, 2, 1, 3).astype(ck.dtype))
+                cv = cv.at[pid, :, off, :].set(v.transpose(0, 2, 1, 3).astype(cv.dtype))
+                new_cache = (ck, cv)
+                gk = ops.gather_kv_pages(ck, block_tables).astype(q.dtype)
+                gv = ops.gather_kv_pages(cv, block_tables).astype(q.dtype)
             out = ops.chunk_attention(q, gk, gv, q_offset=spos,
                                       kv_len=spos + S, impl=impl,
                                       logit_soft_cap=logit_soft_cap)
@@ -293,7 +338,7 @@ def attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=None
         out = ops.flash_attention(q, k, v, causal=True, impl=impl,
                                   logit_soft_cap=logit_soft_cap)
 
-    y = _merge_heads(out) @ p["wo"].astype(x.dtype)
+    y = _matmul(_merge_heads(out), p["wo"], cfg)
     if "gate" in p:  # gated cross-attention (llama-3.2-vision)
         y = jnp.tanh(p["gate"].astype(x.dtype)) * y
     y = shard_as(y, "batch", "res_seq", "embed")

@@ -131,7 +131,8 @@ class TransformerLM:
         k, v = context_kv
         out = ops.flash_attention(q, k.astype(q.dtype), v.astype(q.dtype), causal=False,
                                   impl="pallas" if cfg.use_kernels else "ref")
-        y = out.transpose(0, 2, 1, 3).reshape(B, S, H * Dh) @ cp["attn"]["wo"].astype(h.dtype)
+        y = layers._matmul(out.transpose(0, 2, 1, 3).reshape(B, S, H * Dh),
+                           cp["attn"]["wo"], cfg)
         y = jnp.tanh(cp["attn"]["gate"].astype(h.dtype)) * y
         return x + y
 
@@ -239,18 +240,26 @@ class TransformerLM:
             specs["cross_v"] = (None, "batch", "kv_heads", None, None)
         return specs
 
+    def _dense_names(self, i):
+        if self.cfg.use_mla:
+            return (f"dense{i}_ckv", f"dense{i}_krope")
+        return (f"dense{i}_k", f"dense{i}_v")
+
     def _dense_cache(self, cache, i):
-        cfg = self.cfg
-        if cfg.use_mla:
-            return (cache[f"dense{i}_ckv"], cache[f"dense{i}_krope"])
-        return (cache[f"dense{i}_k"], cache[f"dense{i}_v"])
+        names = self._dense_names(i)
+        lc = tuple(cache[n] for n in names)
+        # quantized pools: the per-position scale sidecars ride along as
+        # two extra tuple entries (see layers.attention / mla_attention)
+        if f"{names[0]}_qscale" in cache:
+            lc += tuple(cache[f"{n}_qscale"] for n in names)
+        return lc
 
     def _store_dense(self, cache, i, val):
-        cfg = self.cfg
-        if cfg.use_mla:
-            cache[f"dense{i}_ckv"], cache[f"dense{i}_krope"] = val
-        else:
-            cache[f"dense{i}_k"], cache[f"dense{i}_v"] = val
+        names = self._dense_names(i)
+        if len(val) == 4:
+            names += tuple(f"{n}_qscale" for n in names)
+        for n, v in zip(names, val):
+            cache[n] = v
         return cache
 
     # ------------------------------------------------------------------ prefill / decode
@@ -277,10 +286,12 @@ class TransformerLM:
                                  pos_offset=poff)
             new_cache = self._store_dense(new_cache, i, val)
 
-        if cfg.use_mla:
-            layer_cache = (cache["c_kv"], cache["k_rope"])
-        else:
-            layer_cache = (cache["k"], cache["v"])
+        kv_names = ("c_kv", "k_rope") if cfg.use_mla else ("k", "v")
+        layer_cache = tuple(cache[n] for n in kv_names)
+        if f"{kv_names[0]}_qscale" in cache:
+            # quantized pools: the (L, P, ...) scale sidecars scan with
+            # their pages as two extra layer-cache entries
+            layer_cache += tuple(cache[f"{n}_qscale"] for n in kv_names)
 
         offset = cfg.first_dense_layers
 
@@ -301,10 +312,10 @@ class TransformerLM:
 
         x, updated = jax.lax.scan(
             body, x, (params["blocks"], offset + jnp.arange(self.n_scan), layer_cache))
-        if cfg.use_mla:
-            new_cache["c_kv"], new_cache["k_rope"] = updated
-        else:
-            new_cache["k"], new_cache["v"] = updated
+        names = kv_names + (tuple(f"{n}_qscale" for n in kv_names)
+                            if len(updated) == 4 else ())
+        for n, u in zip(names, updated):
+            new_cache[n] = u
         return x, new_cache
 
     def prefill(self, params, tokens, cache, extra=None):

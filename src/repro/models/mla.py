@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.distributed.sharding import shard_as
 from repro.kernels import ops
 from repro.models.common import ModelConfig, ParamDef
-from repro.models.layers import apply_rope, rope_freqs
+from repro.models.layers import _matmul, apply_rope, rope_freqs
 
 
 def mla_def(cfg: ModelConfig):
@@ -91,7 +91,14 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
     new_cache = None
     q_off = cache_index                      # causal offset for chunked paths
     if cache is not None and block_tables is not None:
-        cc, cr = cache                       # latent pool pages (P, page, r)
+        # quantized latent pools carry per-position amax scales as two
+        # extra leaves: (cc, cr, cs, rs) with cs/rs (P, page) float32 —
+        # c_kv and k_rope quantize over their feature axis like any
+        # other "kv_seq" leaf
+        cc, cr, *qs = cache                  # latent pool pages (P, page, r)
+        quant = bool(qs)
+        if quant:
+            cs, rs = qs
         page = cc.shape[1]
         if S == 1:  # paged decode: scatter latents to (page id, offset)
             pos = jnp.asarray(cache_index).reshape(-1)             # (B,)
@@ -102,8 +109,16 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
             pid = jnp.take_along_axis(block_tables, (spos // page)[:, None],
                                       axis=1)[:, 0]
             off = spos % page
-            cc = cc.at[pid, off, :].set(c_kv[:, 0, :].astype(cc.dtype))
-            cr = cr.at[pid, off, :].set(k_rope[:, 0, :].astype(cr.dtype))
+            if quant:
+                cq, csc = ops.quantize_kv(c_kv[:, 0, :], cc.dtype)  # (B,)
+                rq, rsc = ops.quantize_kv(k_rope[:, 0, :], cr.dtype)
+                cc = cc.at[pid, off, :].set(cq)
+                cr = cr.at[pid, off, :].set(rq)
+                cs = cs.at[pid, off].set(csc)
+                rs = rs.at[pid, off].set(rsc)
+            else:
+                cc = cc.at[pid, off, :].set(c_kv[:, 0, :].astype(cc.dtype))
+                cr = cr.at[pid, off, :].set(k_rope[:, 0, :].astype(cr.dtype))
             kv_len = spos + 1                # gathered view is slot-space
         elif jnp.ndim(cache_index) == 0:
             # paged chunked prefill (chunk_plan keeps chunks in one page)
@@ -111,10 +126,18 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
             si = (cache_index if pos_offset is None
                   else cache_index - jnp.asarray(pos_offset).reshape(()))
             pid = block_tables[0, si // page]
-            cc = jax.lax.dynamic_update_slice(
-                cc, c_kv.astype(cc.dtype), (pid, si % page, 0))
-            cr = jax.lax.dynamic_update_slice(
-                cr, k_rope.astype(cr.dtype), (pid, si % page, 0))
+            if quant:
+                cq, csc = ops.quantize_kv(c_kv, cc.dtype)     # (1, S)
+                rq, rsc = ops.quantize_kv(k_rope, cr.dtype)
+                cc = jax.lax.dynamic_update_slice(cc, cq, (pid, si % page, 0))
+                cr = jax.lax.dynamic_update_slice(cr, rq, (pid, si % page, 0))
+                cs = jax.lax.dynamic_update_slice(cs, csc, (pid, si % page))
+                rs = jax.lax.dynamic_update_slice(rs, rsc, (pid, si % page))
+            else:
+                cc = jax.lax.dynamic_update_slice(
+                    cc, c_kv.astype(cc.dtype), (pid, si % page, 0))
+                cr = jax.lax.dynamic_update_slice(
+                    cr, k_rope.astype(cr.dtype), (pid, si % page, 0))
             kv_len = si + S
             q_off = si
         else:  # paged verify window: per-token latent scatter, per-slot pos
@@ -131,13 +154,26 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
                                       axis=1)
             pid = jnp.where(valid, pid, 0)
             off = jnp.where(valid, pos2d % page, 0)
-            cc = cc.at[pid, off, :].set(c_kv.astype(cc.dtype))
-            cr = cr.at[pid, off, :].set(k_rope.astype(cr.dtype))
+            if quant:
+                cq, csc = ops.quantize_kv(c_kv, cc.dtype)     # (B, S)
+                rq, rsc = ops.quantize_kv(k_rope, cr.dtype)
+                cc = cc.at[pid, off, :].set(cq)
+                cr = cr.at[pid, off, :].set(rq)
+                cs = cs.at[pid, off].set(csc)
+                rs = rs.at[pid, off].set(rsc)
+            else:
+                cc = cc.at[pid, off, :].set(c_kv.astype(cc.dtype))
+                cr = cr.at[pid, off, :].set(k_rope.astype(cr.dtype))
             kv_len = spos + S
             q_off = spos
-        new_cache = (cc, cr)
-        kv_latent = ops.gather_kv_pages(cc, block_tables).astype(x.dtype)
-        k_rope_all = ops.gather_kv_pages(cr, block_tables).astype(x.dtype)
+        if quant:
+            new_cache = (cc, cr, cs, rs)
+            kv_latent = ops.gather_dequant_kv_pages(cc, cs, block_tables)
+            k_rope_all = ops.gather_dequant_kv_pages(cr, rs, block_tables)
+        else:
+            new_cache = (cc, cr)
+            kv_latent = ops.gather_kv_pages(cc, block_tables).astype(x.dtype)
+            k_rope_all = ops.gather_kv_pages(cr, block_tables).astype(x.dtype)
         Skv = kv_latent.shape[1]
     elif cache is not None:
         from repro.models.layers import update_cache_at
@@ -202,7 +238,7 @@ def mla_attention(x, p, cfg: ModelConfig, *, positions, cache=None, cache_index=
             out = ops.flash_attention(q_full, k_full, _pad_v(vv, dn + dr),
                                       causal=True, scale=scale, impl=impl)[..., :dv]
 
-    y = out.transpose(0, 2, 1, 3).reshape(B, S, H * dv) @ p["wo"].astype(x.dtype)
+    y = _matmul(out.transpose(0, 2, 1, 3).reshape(B, S, H * dv), p["wo"], cfg)
     y = shard_as(y, "batch", "seq", "embed")
     return (y, new_cache) if cache is not None else y
 

@@ -59,7 +59,8 @@ class ServingEngine:
                  max_seq: int = 256, sampler: SamplerConfig | None = None,
                  scheduler_slots: int = 4, prefill_chunk: int = 32,
                  page: int = 16, prefix_cache_pages: int = 256,
-                 paged_kv: bool = True, speculative: str = "off",
+                 paged_kv: bool = True, kv_dtype: str = "fp32",
+                 speculative: str = "off",
                  spec_k: int = 4, drafter_cfg: ModelConfig | None = None,
                  drafter_params=None, window_policy=None):
         self.cfg = cfg
@@ -79,6 +80,13 @@ class ServingEngine:
         # the contiguous splice path — kept as the A/B lever the
         # bytes-copied-per-admission benchmark flips.
         self.paged_kv = paged_kv
+        # KV-page storage dtype ("fp32" | "int8" | "fp8_e4m3"): quantized
+        # modes store the batcher's pool pages in the narrow dtype with a
+        # per-position amax-scale sidecar, dequantized inside the paged
+        # attention kernel. fp32 (the default) is bitwise-unchanged.
+        # Applies to the native paged path only; the contiguous splice
+        # path and single-shot generate() stay full-precision.
+        self.kv_dtype = kv_dtype
         # speculative decoding for the batcher's decode path: "off",
         # "ngram" (prompt-lookup self-drafting), or "model" (a second,
         # cheaper model registered below — STREAM's cross-tier pairing).

@@ -57,6 +57,16 @@ from repro.models.common import LeafLayout, cache_layout, has_state_leaves
 
 TRASH_PAGE = 0
 
+# kv_dtype axis: how "kv_seq" pool leaves are stored. "fp32" keeps the
+# model's compute dtype (the bitwise-unchanged default — no quantization
+# anywhere on the path); the quantized modes store pages in the narrow
+# dtype plus a float32 per-(page, kv-head, position) amax-scale sidecar.
+KV_DTYPES = {
+    "fp32": None,
+    "int8": jnp.int8,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+}
+
 
 @dataclass
 class PoolStats:
@@ -172,9 +182,14 @@ class PagePool:
     snapshot taken at its end position.
     """
 
-    def __init__(self, model, *, page: int = 16, capacity: int = 256):
+    def __init__(self, model, *, page: int = 16, capacity: int = 256,
+                 kv_dtype: str = "fp32"):
+        assert kv_dtype in KV_DTYPES, \
+            f"kv_dtype must be one of {sorted(KV_DTYPES)}, got {kv_dtype!r}"
         self.page = page
         self.capacity = capacity
+        self.kv_dtype = kv_dtype
+        qdt = KV_DTYPES[kv_dtype]
         self.layout = cache_layout(model.cache_specs())
         self.stateful = has_state_leaves(self.layout)
         self._layouts = [l for l in jax.tree.leaves(
@@ -183,23 +198,38 @@ class PagePool:
         tleaves, self._treedef = jax.tree.flatten(template)
         assert len(tleaves) == len(self._layouts), \
             "init_cache / cache_specs structure drift"
+        # dict flatten order is key-sorted — names line up with tleaves
+        self._leaf_names = sorted(template)
         # pooled arrays, one per cache leaf index (None where not pooled)
         self._paged: list = [None] * len(tleaves)
         self._state: list = [None] * len(tleaves)
+        # per-position amax-scale sidecars for quantized pools (None in fp32
+        # mode): pool shape minus the trailing feature axis, float32
+        self._qscales: list = [None] * len(tleaves)
         self._page_bytes = 0         # device bytes one page spans (paged leaves)
         self._state_bytes = 0        # device bytes one state snapshot spans
+        self.pool_bytes = 0          # total device bytes held (incl. sidecars)
         for i, (leaf, lay) in enumerate(zip(tleaves, self._layouts)):
             if lay.batch_axis < 0:
                 continue
             if lay.seq_axis >= 0:
                 shape = lay.pool_shape(leaf.shape, page, capacity + 1)
-                self._paged[i] = jnp.zeros(shape, leaf.dtype)
+                if qdt is not None:
+                    assert lay.seq_axis < len(shape) - 1, \
+                        "quantized pools need a trailing feature axis"
+                    self._paged[i] = jnp.zeros(shape, qdt)
+                    self._qscales[i] = jnp.zeros(shape[:-1], jnp.float32)
+                    self.pool_bytes += self._qscales[i].nbytes
+                else:
+                    self._paged[i] = jnp.zeros(shape, leaf.dtype)
+                self.pool_bytes += self._paged[i].nbytes
                 self._page_bytes += leaf.size * leaf.dtype.itemsize
             else:
                 block = list(leaf.shape)
                 del block[lay.batch_axis]
                 self._state[i] = jnp.zeros((capacity + 1, *block), leaf.dtype)
                 self._state_bytes += leaf.size * leaf.dtype.itemsize
+                self.pool_bytes += self._state[i].nbytes
         self._free = list(range(capacity, 0, -1))   # never hands out page 0
         self._free_set = set(self._free)
         self.high_water = 0          # max pages simultaneously allocated
@@ -263,12 +293,19 @@ class PagePool:
         leaves = [buf if buf is not None else jnp.zeros((), jnp.int32)
                   for buf in self._paged]
         cache = self._treedef.unflatten(leaves)
+        # quantized pools: the scale sidecars ride the cache dict as
+        # "<leaf>_qscale" keys so the models' paged write/read paths and
+        # the batcher's jitted tick carry them alongside their pages
+        for name, sc in zip(self._leaf_names, self._qscales):
+            if sc is not None:
+                cache[f"{name}_qscale"] = sc
         cache["pos"] = jnp.zeros((batch,), jnp.int32)
         # tokens rolled out of each slot's window (attention-sink rolling);
         # rope positions and kernel kv lengths are slot-space: pos - offset
         cache["pos_offset"] = jnp.zeros((batch,), jnp.int32)
         cache["block_tables"] = jnp.zeros((batch, max_pages), jnp.int32)
         self._paged = [None] * len(self._paged)
+        self._qscales = [None] * len(self._qscales)
         self._detached = True
         return cache
 
@@ -281,6 +318,9 @@ class PagePool:
         (arbitrary) pool pages ``pids`` — paged leaves only, ONE device
         dispatch for the whole run."""
         assert not self._detached, "pool buffers owned by the paged batcher"
+        assert self.kv_dtype == "fp32", \
+            "the copying splice path is fp32-only; quantized pools are " \
+            "written in place by the paged decode path"
         n = len(pids)
         self.bytes_copied += n * self._page_bytes
         leaves = jax.tree.leaves(cache)
@@ -362,6 +402,9 @@ class PagePool:
         the end of page ``state_pid``. Returns the updated cache with
         ``pos`` set to the cached-prefix length."""
         assert not self._detached, "pool buffers owned by the paged batcher"
+        assert self.kv_dtype == "fp32", \
+            "the copying splice path is fp32-only; quantized pools are " \
+            "read through the paged decode path"
         n = len(page_ids)
         self.bytes_copied += n * self._page_bytes
         if state_pid is not None:

@@ -58,20 +58,36 @@ def is_quantized(p) -> bool:
     return isinstance(p, dict) and "qw" in p
 
 
-def quantize_mlp_tree(params, *, group_size: int = 128):
+def quantize_mlp_tree(params, *, group_size: int = 128,
+                      attn_out: bool = True):
     """Quantize every gated-MLP weight (w1/w3/w2) in a param tree whose
-    contraction dim divides the group size. Returns a new tree."""
+    contraction dim divides the group size, plus (``attn_out=True``) the
+    attention output projection ``wo`` of every attention block — the
+    one attention matmul whose contraction dim (H * Dh, a multiple of
+    the head count) commonly divides the group size; q/k/v projections
+    stay dense (their activations feed rope/cache paths). Returns a new
+    tree."""
+    def quantize_if_fits(w):
+        if (hasattr(w, "shape") and w.ndim in (2, 3)
+                and w.shape[-2] % group_size == 0):
+            return quantize_weight(w, group_size=group_size)
+        return w
+
     def walk(node):
         if isinstance(node, dict):
             if {"w1", "w2", "w3"} <= set(node.keys()):
                 out = dict(node)
                 for k in ("w1", "w3", "w2"):
-                    w = node[k]
-                    if (hasattr(w, "shape") and w.ndim in (2, 3)
-                            and w.shape[-2] % group_size == 0):
-                        out[k] = quantize_weight(w, group_size=group_size)
+                    out[k] = quantize_if_fits(node[k])
                 return {k: (v if k in ("w1", "w2", "w3") else walk(v))
                         for k, v in out.items()}
+            if attn_out and "wo" in node and "wq" in node:
+                # attention def (GQA or MLA): quantize only the output
+                # projection — every model family routes it through
+                # layers._matmul
+                out = {k: walk(v) for k, v in node.items()}
+                out["wo"] = quantize_if_fits(node["wo"])
+                return out
             return {k: walk(v) for k, v in node.items()}
         if isinstance(node, tuple):
             return tuple(walk(v) for v in node)
@@ -80,9 +96,41 @@ def quantize_mlp_tree(params, *, group_size: int = 128):
     return walk(params)
 
 
-def weight_bytes(params) -> int:
-    total = 0
-    for leaf in jax.tree.leaves(params):
-        if hasattr(leaf, "nbytes"):
-            total += leaf.nbytes
-    return total
+def weight_bytes(params) -> dict:
+    """Byte accounting for a (possibly partially quantized) param tree.
+
+    Returns ``{"total", "quantized", "dense", "dense_equivalent"}``:
+    ``quantized`` counts the bytes of every quantized node (qw + scales
+    + zeros), ``dense`` the remaining full-precision leaves, and
+    ``dense_equivalent`` what the quantized nodes would occupy unpacked
+    at the tree's dense param dtype — the denominator for the actual
+    weight-byte cut (``quantized / dense_equivalent``), which the old
+    sum-every-leaf accounting silently conflated with ``total``."""
+    out = {"total": 0, "quantized": 0, "dense": 0, "dense_equivalent": 0}
+
+    def walk(node):
+        if is_quantized(node):
+            qb = sum(v.nbytes for v in node.values() if hasattr(v, "nbytes"))
+            out["quantized"] += qb
+            out["total"] += qb
+            # unpacked size: 8 int4 values per packed int32 row, at the
+            # scales' float width (the dtype a dense leaf would carry)
+            K = node["qw"].shape[-2] * 8
+            N = node["qw"].shape[-1]
+            L = node["qw"].shape[0] if node["qw"].ndim == 3 else 1
+            out["dense_equivalent"] += L * K * N * node["scales"].dtype.itemsize
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+            return
+        if isinstance(node, (tuple, list)):
+            for v in node:
+                walk(v)
+            return
+        if hasattr(node, "nbytes"):
+            out["dense"] += node.nbytes
+            out["total"] += node.nbytes
+
+    walk(params)
+    return out

@@ -48,7 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import cache_layout, round_up
+from repro.kernels.ref import dequantize_kv, quantize_kv
+from repro.models.common import cache_layout, has_state_leaves, round_up
 from repro.models.layers import rope_shift
 from repro.serving.pagepool import PagePool, SlotSplicer, chunk_plan
 from repro.serving.prefix_cache import PrefixCache, PrefixLease
@@ -232,7 +233,19 @@ class ContinuousBatcher:
         # admission and publish their extensions back at finish.
         if prefix_pages is None:
             prefix_pages = getattr(engine, "prefix_cache_pages", 0)
-        self.pool = (PagePool(self.model, page=page, capacity=prefix_pages)
+        # Quantized pools (engine.kv_dtype int8/fp8_e4m3) serve only the
+        # native paged path — the copying splice path stays fp32 — so
+        # pageability is decided before the pool is built and a pool
+        # that will serve splices is always full-precision.
+        will_page = (bool(prefix_pages)
+                     and not has_state_leaves(self._layout)
+                     and self.max_seq % page == 0
+                     and prefix_pages >= self.max_seq // page
+                     and getattr(engine, "paged_kv", True))
+        kv_dtype = (getattr(engine, "kv_dtype", "fp32") or "fp32") \
+            if will_page else "fp32"
+        self.pool = (PagePool(self.model, page=page, capacity=prefix_pages,
+                              kv_dtype=kv_dtype)
                      if prefix_pages else None)
         self.prefix = PrefixCache(self.pool) if self.pool is not None else None
         # Native paged decode: attention-only models serve every slot
@@ -525,32 +538,55 @@ class ContinuousBatcher:
         -delta is bitwise the key a fresh prefill would rope at
         p - delta. One jitted dispatch per roll, touching only the
         retained pages (trailing unwritten pages ride along — their
-        garbage is masked by kv_len until overwritten)."""
+        garbage is masked by kv_len until overwritten).
+
+        Quantized pools dequantize the retained pages with their scale
+        sidecar, rotate in float32, and requantize — one extra rounding
+        per roll, bounded by the per-roll requant test."""
         if not pids or not self._rope_leaves:
             return
+        qkeys = [f"{k}_qscale" if f"{k}_qscale" in self.cache else None
+                 for k, _ in self._rope_leaves]
         fn = self._shift_fns.get(len(pids))
         if fn is None:
             theta = self.cfg.rope_theta
             axes = [ba for _, ba in self._rope_leaves]
 
-            def shift(bufs, pids, delta):
-                out = []
-                for buf, ba in zip(bufs, axes):
+            def shift(bufs, sbufs, pids, delta):
+                out, sout = [], []
+                for buf, sbuf, ba in zip(bufs, sbufs, axes):
                     pool = jnp.moveaxis(buf, ba, 0)
-                    rot = rope_shift(pool[pids], -delta, theta)
-                    pool = pool.at[pids].set(rot.astype(buf.dtype))
+                    if sbuf is None:
+                        rot = rope_shift(pool[pids], -delta, theta)
+                        pool = pool.at[pids].set(rot.astype(buf.dtype))
+                        sout.append(None)
+                    else:
+                        # scale sidecar shape = pool shape minus the
+                        # trailing feature axis, so ba indexes the same
+                        # page axis in both buffers
+                        spool = jnp.moveaxis(sbuf, ba, 0)
+                        vals = dequantize_kv(pool[pids], spool[pids])
+                        rot = rope_shift(vals, -delta, theta)
+                        qv, sc = quantize_kv(rot, buf.dtype)
+                        pool = pool.at[pids].set(qv)
+                        spool = spool.at[pids].set(sc)
+                        sout.append(jnp.moveaxis(spool, 0, ba))
                     out.append(jnp.moveaxis(pool, 0, ba))
-                return out
+                return out, sout
 
             # donate: a roll must rotate its pages in place, not copy
             # the whole pool (the same argument as store_pages)
             fn = self._shift_fns[len(pids)] = jax.jit(shift,
-                                                      donate_argnums=(0,))
+                                                      donate_argnums=(0, 1))
         bufs = [self.cache[k] for k, _ in self._rope_leaves]
-        new = fn(bufs, jnp.asarray(pids, jnp.int32),
-                 jnp.asarray(delta, jnp.int32))
+        sbufs = [self.cache[qk] if qk is not None else None for qk in qkeys]
+        new, snew = fn(bufs, sbufs, jnp.asarray(pids, jnp.int32),
+                       jnp.asarray(delta, jnp.int32))
         for (k, _), buf in zip(self._rope_leaves, new):
             self.cache[k] = buf
+        for qk, sbuf in zip(qkeys, snew):
+            if qk is not None:
+                self.cache[qk] = sbuf
 
     def _roll_once(self, req: Request, poff: int) -> int:
         """One roll of ``req``'s mapping: evict the oldest non-sink

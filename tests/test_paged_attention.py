@@ -163,6 +163,119 @@ def test_pallas_pos_offset_matches_ref_and_skips_rolled_pages():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
 
 
+# ------------------------------------------------------- quantized pages
+def _quantize_pools(kp, vp, dtype):
+    kq, ks = ref.quantize_kv(kp, dtype)
+    vq, vs = ref.quantize_kv(vp, dtype)
+    return kq, ks, vq, vs
+
+
+def test_quantize_kv_roundtrip_and_invariants():
+    """Symmetric amax quantization: per-position scale over the last
+    axis, int8 within 0.5/127 of amax relative error, all-zero vectors
+    (the trash page) to exact zeros with scale 0, and dequant always
+    finite thanks to the scale-0 guard."""
+    rng = np.random.default_rng(10)
+    x = randn(rng, (5, 16, 64)) * jnp.asarray(
+        rng.uniform(0.01, 100.0, (5, 16, 1)), jnp.float32)  # wild ranges
+    for dt, qmax in ((jnp.int8, 127.0), (jnp.float8_e4m3fn, 448.0)):
+        q, s = ref.quantize_kv(x, dt)
+        assert q.dtype == dt and s.dtype == jnp.float32
+        assert s.shape == x.shape[:-1]
+        back = ref.dequantize_kv(q, s)
+        assert back.dtype == jnp.float32
+        amax = np.abs(np.asarray(x)).max(-1, keepdims=True)
+        tol = (0.51 / qmax) if dt == jnp.int8 else (1.0 / 16)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   atol=float((amax * tol).max()))
+        # zeros quantize to zeros with zero scale, and dequant is finite
+        zq, zs = ref.quantize_kv(jnp.zeros_like(x), dt)
+        assert not np.asarray(zq, np.float32).any()
+        assert not np.asarray(zs).any()
+        assert np.isfinite(np.asarray(ref.dequantize_kv(zq, zs))).all()
+
+
+def test_gather_dequant_matches_dequant_then_gather():
+    rng = np.random.default_rng(11)
+    _, kp, _, bt = _setup(rng)
+    kq, ks = ref.quantize_kv(kp, jnp.int8)
+    g = ref.gather_dequant_kv_pages(kq, ks, bt)
+    exp = ref.gather_kv_pages(ref.dequantize_kv(kq, ks), bt)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(exp))
+
+
+def test_ref_quantized_paged_close_to_fp32():
+    """The jnp oracle with scale operands: output within the attention-
+    level quantization error of the fp32 pool (values are O(1) randn,
+    so absolute logit error stays small)."""
+    rng = np.random.default_rng(12)
+    q, kp, vp, bt = _setup(rng)
+    kv_len = jnp.asarray([1, 37, 96], jnp.int32)
+    base = ref.paged_attention(q, kp, vp, block_tables=bt, kv_len=kv_len)
+    for dt, atol in ((jnp.int8, 0.05), (jnp.float8_e4m3fn, 0.25)):
+        kq, ks, vq, vs = _quantize_pools(kp, vp, dt)
+        out = ref.paged_attention(q, kq, vq, block_tables=bt, kv_len=kv_len,
+                                  k_scales=ks, v_scales=vs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=atol)
+
+
+def test_pallas_quantized_matches_ref():
+    """In-kernel dequant (scale blocks steered by the same scalar-
+    prefetch block table) against the jnp oracle, both dtypes, ragged
+    kv_len + pos_offset."""
+    rng = np.random.default_rng(13)
+    q, kp, vp, bt = _setup(rng)
+    kv_len = jnp.asarray([17, 80, 96], jnp.int32)
+    poff = jnp.asarray([0, 16, 48], jnp.int32)
+    for dt in (jnp.int8, jnp.float8_e4m3fn):
+        kq, ks, vq, vs = _quantize_pools(kp, vp, dt)
+        out = paged_attention(q, kq, vq, block_tables=bt, kv_len=kv_len,
+                              pos_offset=poff, k_scales=ks, v_scales=vs,
+                              interpret=True)
+        exp = ref.paged_attention(q, kq, vq, block_tables=bt, kv_len=kv_len,
+                                  pos_offset=poff, k_scales=ks, v_scales=vs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=1e-4)
+
+
+def test_pallas_quantized_garbage_pages_masked():
+    """Masking must hold with scale operands too: clobbering pages past
+    kv_len (values AND scales) cannot change a bit of the output."""
+    rng = np.random.default_rng(14)
+    q, kp, vp, bt = _setup(rng)
+    kv_len = jnp.asarray([17, 33, 49], jnp.int32)
+    kq, ks, vq, vs = _quantize_pools(kp, vp, jnp.int8)
+    out = paged_attention(q, kq, vq, block_tables=bt, kv_len=kv_len,
+                          k_scales=ks, v_scales=vs, interpret=True)
+    tail = jnp.asarray(np.asarray(bt)[:, 4])
+    out2 = paged_attention(q, kq.at[tail].set(127), vq.at[tail].set(-127),
+                           block_tables=bt, kv_len=kv_len,
+                           k_scales=ks.at[tail].set(1e6),
+                           v_scales=vs.at[tail].set(1e6), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_rope_shift_requant_error_bounded():
+    """The rolling-window requant cycle: dequant -> rope_shift -> requant
+    must stay within ~2x a single quantization step of rotating the
+    exact values (rotation is norm-preserving per 2D pair, so amax —
+    and with it the quantization step — cannot blow up)."""
+    from repro.models.layers import rope_shift
+
+    rng = np.random.default_rng(15)
+    x = randn(rng, (4, 2, 32, 64))                  # (pages, Hkv, page, D)
+    for dt, step in ((jnp.int8, 1 / 127.0), (jnp.float8_e4m3fn, 1 / 16.0)):
+        q1, s1 = ref.quantize_kv(x, dt)
+        rolled = rope_shift(ref.dequantize_kv(q1, s1), -32, 10000.0)
+        q2, s2 = ref.quantize_kv(rolled, dt)
+        exact = rope_shift(x, -32, 10000.0)
+        amax = np.abs(np.asarray(exact)).max()
+        err = np.abs(np.asarray(ref.dequantize_kv(q2, s2))
+                     - np.asarray(exact)).max()
+        assert err < 2.5 * step * float(amax) * np.sqrt(2), (dt, err)
+
+
 def test_pos_offset_zero_is_bitwise_default():
     """poff=0 must take the exact same arithmetic path as no poff at
     all — the token-identity guarantee for window-fitting sessions."""

@@ -35,11 +35,47 @@ def test_quantize_mlp_tree_shrinks_weights():
     model = build_model(cfg)
     params = model.init(RNG)
     qparams = quantize_mlp_tree(params, group_size=128)
-    assert weight_bytes(qparams) < weight_bytes(params)
-    # mlp weights became quantized dicts; attention untouched
+    qb, db = weight_bytes(qparams), weight_bytes(params)
+    assert qb["total"] < db["total"]
+    assert db["quantized"] == 0 and db["dense"] == db["total"]
+    assert qb["quantized"] > 0
+    assert qb["total"] == qb["quantized"] + qb["dense"]
+    # mlp weights became quantized dicts; attention q/k/v untouched
     blk = qparams["blocks"]
     assert is_quantized(blk["mlp"]["w1"])
     assert not is_quantized(blk["attn"]["wq"])
+
+
+def test_weight_bytes_pins_w4_ratio():
+    # int4 packing is 1/8 of fp32; fp32 scales+zeros at group 128 add
+    # 2/128 more: 0.125 + 0.015625 = 0.140625 of dense-equivalent bytes
+    cfg = get_smoke_config("minitron-8b").replace(d_model=128, d_ff=256)
+    params = build_model(cfg).init(RNG)
+    qb = weight_bytes(quantize_mlp_tree(params, group_size=128))
+    ratio = qb["quantized"] / qb["dense_equivalent"]
+    assert abs(ratio - 0.140625) < 1e-6, ratio
+
+
+def test_quantize_mlp_tree_covers_attn_wo():
+    cfg = get_smoke_config("minitron-8b").replace(
+        d_model=128, d_ff=256, vocab_size=384, compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    # smoke wo contraction dim is H*Dh = 64 — group 64 makes it eligible
+    qparams = quantize_mlp_tree(params, group_size=64)
+    blk = qparams["blocks"]
+    assert is_quantized(blk["attn"]["wo"])
+    assert not is_quantized(blk["attn"]["wq"])
+    # attn_out=False leaves wo dense
+    noq = quantize_mlp_tree(params, group_size=64, attn_out=False)
+    assert not is_quantized(noq["blocks"]["attn"]["wo"])
+    # forward with quantized wo stays correlated with dense
+    tokens = jax.random.randint(RNG, (2, 12), 0, cfg.vocab_size)
+    full = model.forward(params, tokens)
+    qfull = model.forward(qparams, tokens)
+    cos = float(jnp.sum(full * qfull) /
+                (jnp.linalg.norm(full) * jnp.linalg.norm(qfull)))
+    assert cos > 0.95, cos
 
 
 def test_quantized_forward_close_and_engine_generates():
